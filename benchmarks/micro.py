@@ -1,0 +1,88 @@
+"""Microbenchmarks of the SWARM-LLM hot paths (CPU timings, us/call)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_all() -> list[tuple[str, float, float]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # uncertainty probe (jnp oracle path; the Pallas kernel is TPU-target)
+    from repro.core.uncertainty import UncertaintyConfig, difficulty_jit
+    B, N, V = 8, 16, 49152
+    logits = jax.random.normal(key, (B, N, V), jnp.float32)
+    toks = jax.random.randint(key, (B, N), 0, V)
+    ucfg = UncertaintyConfig()
+    us = _time(difficulty_jit, logits, toks, ucfg)
+    rows.append(("uncertainty_probe_8x16x49k", us, B * N))
+
+    # consensus (Eq. 14)
+    from repro.core.consensus import batched_consensus
+    ans = jax.random.randint(key, (64, 4, 8), 0, 16)
+    u = jax.random.uniform(key, (64, 4))
+    f = jax.jit(lambda a, uu: batched_consensus(a, uu))
+    us = _time(f, ans, u)
+    rows.append(("consensus_b64_n4", us, 64))
+
+    # router phase A (vectorised Alg. 1 + budget scan)
+    from repro.core import budget as bl
+    from repro.core.router import RouterConfig, route
+    cfg = RouterConfig.final()
+    uu = jax.random.uniform(key, (256,))
+    ss = jax.random.uniform(key, (256,))
+    cost = jnp.full((256,), 0.001)
+    bud = bl.init_budget(1.0)
+
+    def r(uu, ss, cost):
+        return route(uu, ss, cfg=cfg, budget=bud, wan_ok=True,
+                     est_cloud_cost=cost).decision
+    us = _time(jax.jit(r), uu, ss, cost)
+    rows.append(("router_phaseA_b256", us, 256))
+
+    # flash-attention oracle vs pallas-interpret (correct-by-construction)
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q = jax.random.normal(key, (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: flash_attention_ref(a, b, c)), q, k, v)
+    rows.append(("flash_attention_ref_s256", us, 256))
+
+    # smoke-model decode step (serving inner loop)
+    from repro import configs as C
+    from repro.models import transformer as T
+    cfg_m = C.get_smoke("smollm-135m")
+    params = T.init_params(cfg_m, key)
+    cache = jax.tree.map(jnp.asarray, T.init_cache(cfg_m, 4, 64))
+    tok = jnp.zeros((4, 1), jnp.int32)
+    idx = jnp.zeros((4,), jnp.int32)
+
+    @jax.jit
+    def dstep(params, tok, cache, idx):
+        return T.decode_step(params, cfg_m, tok, cache, idx)
+    us = _time(dstep, params, tok, cache, idx)
+    rows.append(("decode_step_smoke_b4", us, 4))
+
+    # int8 error-feedback gradient compression
+    from repro.training.compression import compress_with_feedback
+    g = jax.random.normal(key, (1 << 20,))
+    err = jnp.zeros_like(g)
+    us = _time(jax.jit(compress_with_feedback), g, err)
+    rows.append(("grad_compress_int8_1M", us, 1 << 20))
+
+    return rows

@@ -1,0 +1,45 @@
+"""Routing-parameter sensitivity (paper Table I / Sec. V-C).
+
+Replays one study run's logged probe signals (U, safety s, consensus S(a*))
+through the REAL router for a grid of (tau_high, gamma), tracing the
+cloud-usage / hard-accuracy-proxy frontier — the trade-off the paper tuned
+by hand ("slightly more aggressive configuration", Sec. V-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budget as B
+from repro.core import router as R
+
+
+def sweep_from_log(u: np.ndarray, s: np.ndarray, consensus: np.ndarray,
+                   base: R.RouterConfig,
+                   tau_high_grid=(0.5, 0.65, 0.8, 0.9, 0.95),
+                   gamma_grid=(0.3, 0.6)) -> list[dict]:
+    """tau_high_grid entries are U-quantiles; consensus NaN = no swarm round
+    (treated as accepted)."""
+    cons = np.where(np.isnan(consensus), 1.0, consensus)
+    rows = []
+    for q in tau_high_grid:
+        for gamma in gamma_grid:
+            cfg = dataclasses.replace(
+                base, tau_high=float(np.quantile(u, q)), gamma=gamma)
+            bud = B.init_budget(1.0)
+            pa = R.route(jnp.asarray(u), jnp.asarray(s), cfg=cfg, budget=bud,
+                         wan_ok=True,
+                         est_cloud_cost=jnp.full(u.shape, 1e-4))
+            pb = R.post_consensus(pa.decision, jnp.asarray(cons, np.float32),
+                                  cfg=cfg, budget=pa.budget, wan_ok=True,
+                                  est_cloud_cost=jnp.full(u.shape, 1e-4))
+            dec = np.asarray(pb.decision)
+            cloud = np.isin(dec, (R.CLOUD, R.CLOUD_SAFETY)).mean()
+            rows.append({"tau_high_q": q, "gamma": gamma,
+                         "cloud_usage": float(cloud),
+                         "swarm_frac": float((dec == R.SWARM).mean()),
+                         "local_frac": float((dec == R.LOCAL).mean())})
+    return rows

@@ -1,0 +1,93 @@
+"""Paper-table benchmarks: Tables III, IV, V + Table I sensitivity sweep.
+
+One gateway build (real trained tiers + real routing code, simulated link
+timings) feeds all tables; results are cached to experiments/tables.json so
+`python -m benchmarks.run` stays cheap on re-runs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+PAPER = {  # anchors from the paper (for the comparison column)
+    "table3": {"edge_mean": 1.05, "edge_p95": 2.28, "cloud_mean": 4.47,
+               "cloud_p95": 11.33, "swarm_mean": 5.08, "swarm_p95": 13.18,
+               "swarm_cloud_usage": 0.28},
+    "table4": {"edge": (0.225, 0.45, 0.00), "cloud": (0.475, 0.65, 0.30),
+               "swarm": (0.250, 0.35, 0.15)},
+    "table5": {"CER": 0.280, "TER": 0.413, "SER": 0.800},
+}
+
+
+def run_study(train_steps: int = 300, seed: int = 0,
+              quorum: int | None = None) -> dict:
+    from repro.data.workload import FactWorld
+    from repro.launch.serve import build_gateway
+    from repro.serving.gateway import run_cloud_only, run_edge_only
+
+    gw, probe, cloud, world = build_gateway(train_steps, quorum=quorum,
+                                            seed=seed)
+    queries = world.study_workload()
+    log = gw.answer_batch(queries)
+    edge = run_edge_only(queries, probe, gw.sim)
+    cl = run_cloud_only(queries, cloud, gw.sim)
+
+    def t3(lg):
+        return {"mean": float(lg.latency.mean()),
+                "p95": float(np.percentile(lg.latency, 95)),
+                "cloud_usage": lg.cloud_usage(),
+                "cost_per_1k": float(lg.cost.sum() / len(lg.latency) * 1000)}
+
+    def t4(lg):
+        return {"overall": lg.accuracy(), "easy": lg.accuracy("easy"),
+                "hard": lg.accuracy("hard")}
+
+    pm = log.privacy()
+    decisions = np.bincount(log.decision, minlength=5).tolist()
+    return {
+        "table3": {"edge": t3(edge), "cloud": t3(cl), "swarm": t3(log)},
+        "table4": {"edge": t4(edge), "cloud": t4(cl), "swarm": t4(log)},
+        "table5": {"CER": float(pm.cer), "TER": float(pm.ter),
+                   "SER": float(pm.ser)},
+        "decisions": decisions,
+        "summoning_rate": float(np.mean((log.decision == 2)
+                                        | (log.decision == 3))),
+        "mean_consensus": float(np.nanmean(log.consensus))
+        if not np.all(np.isnan(log.consensus)) else None,
+        "distill_buffer": len(gw.distill_buffer.items),
+    }
+
+
+def cached_study(path: str = "experiments/tables.json",
+                 train_steps: int = 300, force: bool = False) -> dict:
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    res = run_study(train_steps)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def emit_rows(res: dict):
+    """CSV rows (name, us_per_call, derived) for benchmarks.run."""
+    rows = []
+    for arch in ("edge", "cloud", "swarm"):
+        t = res["table3"][arch]
+        rows.append((f"table3_{arch}_mean_latency_s", "", t["mean"]))
+        rows.append((f"table3_{arch}_p95_latency_s", "", t["p95"]))
+        rows.append((f"table3_{arch}_cloud_usage", "", t["cloud_usage"]))
+        rows.append((f"table3_{arch}_cost_per_1k_usd", "", t["cost_per_1k"]))
+        a = res["table4"][arch]
+        rows.append((f"table4_{arch}_acc_overall", "", a["overall"]))
+        rows.append((f"table4_{arch}_acc_easy", "", a["easy"]))
+        rows.append((f"table4_{arch}_acc_hard", "", a["hard"]))
+    for k, v in res["table5"].items():
+        rows.append((f"table5_{k.lower()}_norm", "", v))
+        rows.append((f"table5_{k.lower()}_paper", "", PAPER["table5"][k]))
+    rows.append(("summoning_rate", "", res["summoning_rate"]))
+    return rows

@@ -1,0 +1,67 @@
+"""End-to-end training driver for an edge SLM (deliverable b).
+
+Presets:
+  tiny   (default) — reduced smollm config, a few hundred steps on CPU
+  100m             — the REAL smollm-135m config (30L, d=576); run this on
+                     accelerators; on this CPU container it's feasible only
+                     with very small batch/seq (documented, not default)
+
+  PYTHONPATH=src python examples/train_slm.py --preset tiny --steps 300
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.data.workload import FactWorld
+from repro.models import transformer as T
+from repro.training import optimizer as opt
+from repro.training import train as TR
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.preset == "tiny":
+        cfg = dataclasses.replace(C.get_smoke("smollm-135m"), vocab_size=512)
+    else:
+        cfg = C.get_config("smollm-135m")      # 135M params, real config
+
+    print(f"training {cfg.name}: {cfg.num_params()/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+    ocfg = opt.AdamWConfig(lr=2e-2 if args.preset == "tiny" else 3e-4,
+                           total_steps=args.steps,
+                           warmup_steps=max(args.steps // 10, 1),
+                           weight_decay=0.0 if args.preset == "tiny" else 0.1)
+    step_fn = TR.build_train_step(cfg, ocfg, None)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init(params)
+    pipe = SyntheticLMPipeline(args.batch, args.seq,
+                               world=FactWorld(n_ent=16, n_rel=6))
+    t0 = time.time()
+    for s in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in pipe.get_batch(s).items()}
+        params, state, m = step_fn(params, state, b)
+        if s % 50 == 0 or s == args.steps - 1:
+            tput = args.batch * args.seq * (s + 1) / (time.time() - t0)
+            print(f"step {s:4d} loss {float(m['loss']):.4f} "
+                  f"({tput:,.0f} tok/s)", flush=True)
+        if args.ckpt_dir and (s + 1) % 100 == 0:
+            from repro.training import checkpoint as ck
+            ck.save(args.ckpt_dir, s + 1, {"params": params, "opt": state},
+                    extra={"step": s + 1})
+
+
+if __name__ == "__main__":
+    main()

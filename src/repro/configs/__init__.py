@@ -1,0 +1,133 @@
+"""Architecture registry, assigned input shapes, and abstract input specs.
+
+Every assigned architecture is selectable via ``--arch <id>`` (dashes or
+underscores).  ``input_specs`` returns ShapeDtypeStruct stand-ins only — the
+dry-run never allocates real parameters or activations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+ARCH_IDS = (
+    "hubert-xlarge",
+    "qwen1.5-110b",
+    "smollm-135m",
+    "llama3-8b",
+    "command-r-plus-104b",
+    "mamba2-780m",
+    "recurrentgemma-2b",
+    "llama4-scout-17b-a16e",
+    "deepseek-moe-16b",
+    "llava-next-mistral-7b",
+    # paper's own swarm prototype tiers (edge SLM / gateway / cloud FM)
+    "swarm-edge-1b",
+)
+
+
+def _module(arch: str):
+    name = arch.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (LM-family: seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicability(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if cfg.family in ("encoder", "audio") and shape.kind == "decode":
+        return "encoder-only: no decode step"
+    if shape.name == "long_500k" and not _subquadratic(cfg):
+        return "full quadratic attention: long_500k needs sub-quadratic"
+    return None
+
+
+def _subquadratic(cfg: ModelConfig) -> bool:
+    kinds = {m for m, _ in cfg.layer_plan()}
+    return "attn" not in kinds  # ssd / rglru / attn_local only
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) cells for the assigned matrix."""
+    out = []
+    for arch in ARCH_IDS[:10]:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            skip = applicability(cfg, shape)
+            if skip is None or include_skipped:
+                out.append((arch, shape.name, skip))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: full-sequence batch; decode: one new token + cache specs
+    (the cache itself comes from ``jax.eval_shape`` over ``init_cache``).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.family in ("encoder", "audio"):
+            batch["frontend_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+            s_text = S
+        elif cfg.frontend == "vision_patches":
+            F = cfg.frontend_tokens
+            batch["frontend_embeds"] = _sds((B, F, cfg.d_model), jnp.bfloat16)
+            batch["tokens"] = _sds((B, S - F), jnp.int32)
+            s_text = S - F
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+            s_text = S
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, s_text), jnp.int32)
+            batch["loss_mask"] = _sds((B, s_text), jnp.float32)
+        return batch
+    # decode
+    from repro.models.transformer import init_cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "index": _sds((B,), jnp.int32),
+        "cache": cache,
+    }

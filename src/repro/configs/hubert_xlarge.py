@@ -1,0 +1,27 @@
+"""HuBERT-XLarge [arXiv:2106.07447]: 48L encoder-only audio backbone.
+
+The conv waveform frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings at d_model.  Vocab 504 = masked-unit
+(cluster) prediction head.  No decode step (encoder-only) — decode shapes
+are skipped (DESIGN.md §4).
+"""
+from repro.models.common import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge", family="audio",
+        num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+        head_dim=80, d_ff=5120, vocab_size=504,
+        causal=False, ffn_act="gelu", frontend="audio_frames",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge-smoke", family="audio",
+        num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=64,
+        causal=False, ffn_act="gelu", frontend="audio_frames",
+        attn_q_block=32, attn_kv_block=32,
+    )

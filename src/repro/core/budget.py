@@ -1,0 +1,60 @@
+"""Hard cloud-budget accounting (paper Eq. 13).
+
+Budget_cloud^used accumulates the monetary cost of cloud-invoked queries over
+an accounting window; when remaining budget is insufficient the gateway
+disables cloud escalation (fallback to swarm/local).  ``charge_batch`` keeps
+the prototype's strictly sequential semantics for a whole batch via
+``lax.scan`` — a query is only admitted if budget remains *after* all
+earlier queries in the batch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class BudgetState(NamedTuple):
+    total: Array     # () f32 — Budget_cloud^total for the window
+    used: Array      # () f32 — Budget_cloud^used
+    window_id: Array  # () i32 — accounting window (e.g. day index)
+
+
+def init_budget(total: float, window_id: int = 0) -> BudgetState:
+    return BudgetState(total=jnp.float32(total), used=jnp.float32(0.0),
+                       window_id=jnp.int32(window_id))
+
+
+def roll_window(state: BudgetState, window_id: Array) -> BudgetState:
+    """Reset `used` when the accounting window advances."""
+    fresh = window_id != state.window_id
+    return BudgetState(
+        total=state.total,
+        used=jnp.where(fresh, 0.0, state.used),
+        window_id=window_id.astype(jnp.int32),
+    )
+
+
+def remaining(state: BudgetState) -> Array:
+    return jnp.maximum(state.total - state.used, 0.0)
+
+
+def charge_batch(state: BudgetState, costs: Array, wants_cloud: Array
+                 ) -> tuple[Array, BudgetState]:
+    """Sequentially admit cloud requests while budget remains (Eq. 13).
+
+    costs (B,) f32 estimated cloud cost per query; wants_cloud (B,) bool.
+    Returns (admitted (B,) bool, new state).
+    """
+    def step(used, inp):
+        cost, wants = inp
+        ok = wants & (used + cost <= state.total)
+        return used + jnp.where(ok, cost, 0.0), ok
+
+    used_after, admitted = jax.lax.scan(
+        step, state.used, (costs.astype(jnp.float32), wants_cloud))
+    return admitted, state._replace(used=used_after)

@@ -1,0 +1,73 @@
+"""Uncertainty-weighted swarm consensus (paper Sec. IV-G, Eq. 14).
+
+Answers are token-id sequences (pad = -1).  Clustering is exact-match in
+token space — the same operation as the paper's lowercase/collapse-whitespace
+string grouping, applied after tokenisation.  Each node j gets weight
+w_j = clip(1 - U_j, w_min, 1); cluster score S(a) = Σ_{j∈a} w_j / Σ_k w_k.
+The representative of the winning cluster is its longest member (paper's
+tie-break).  Everything is vectorized jnp over the (small) peer dimension.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PAD = -1
+W_MIN_DEFAULT = 0.05  # paper's w_min
+
+
+class ConsensusResult(NamedTuple):
+    rep_index: Array      # () int32: index of representative answer
+    best_score: Array     # () f32: S(a*) ∈ [0,1]
+    cluster_id: Array     # (n,) int32: cluster of each answer
+    scores: Array         # (n,) f32: S(cluster_of_j) per answer
+    weights: Array        # (n,) f32: w_j
+
+
+def _equality_matrix(answers: Array) -> Array:
+    """answers (n, T) padded with PAD -> (n, n) bool exact-sequence equality."""
+    eq = (answers[:, None, :] == answers[None, :, :])
+    return eq.all(axis=-1)
+
+
+def weighted_consensus(answers: Array, u: Array,
+                       w_min: float = W_MIN_DEFAULT) -> ConsensusResult:
+    """Eq. 14 over n peer answers. answers (n,T) int32, u (n,) ∈ [0,1]."""
+    n = answers.shape[0]
+    eq = _equality_matrix(answers)                         # (n,n)
+    # cluster id = smallest index of an equal answer (equality is transitive
+    # for exact match, so this is a proper partition)
+    idx = jnp.arange(n)
+    cluster = jnp.min(jnp.where(eq, idx[None, :], n), axis=1)
+
+    w = jnp.clip(1.0 - u.astype(jnp.float32), w_min, 1.0)  # (n,)
+    total = w.sum()
+    # score of my cluster = sum of weights of members equal to me
+    member_w = jnp.where(eq, w[None, :], 0.0)
+    scores = member_w.sum(axis=1) / jnp.maximum(total, 1e-9)
+
+    best_score = scores.max()
+    # representative: longest answer within the best-scoring cluster
+    lengths = (answers != PAD).sum(axis=1)
+    in_best = scores >= best_score - 1e-9
+    rep = jnp.argmax(jnp.where(in_best, lengths, -1))
+    return ConsensusResult(rep_index=rep.astype(jnp.int32),
+                           best_score=best_score,
+                           cluster_id=cluster.astype(jnp.int32),
+                           scores=scores, weights=w)
+
+
+def batched_consensus(answers: Array, u: Array,
+                      w_min: float = W_MIN_DEFAULT) -> ConsensusResult:
+    """answers (B, n, T), u (B, n) -> batched ConsensusResult."""
+    return jax.vmap(lambda a, uu: weighted_consensus(a, uu, w_min))(answers, u)
+
+
+def consensus_decision(result: ConsensusResult, gamma: float) -> Array:
+    """1 if the swarm answer is accepted (S(a*) >= γ), else escalate."""
+    return (result.best_score >= gamma).astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""Distillation feedback loop (paper Sec. IV-H).
+
+When D(Q) = cloud, the gateway logs (Q, context, M_cloud(Q)) into a
+privacy-scrubbed buffer; logged examples later fine-tune edge SLM LoRA
+adapters against the FM teacher (soft-target KL + hard-target CE), which
+distils cloud behaviour back into the swarm.  The paper sketches this and
+defers it to future work — here it is implemented end-to-end (see
+examples/distill_loop.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lora as lora_lib
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class DistillBuffer:
+    """Host-side ring buffer of escalated queries + teacher responses."""
+    capacity: int = 4096
+    items: list = dataclasses.field(default_factory=list)
+
+    def log(self, query_tokens, teacher_tokens, meta: dict | None = None,
+            scrub=None):
+        """Respecting privacy policy: `scrub` strips/anonymises before storage."""
+        if scrub is not None:
+            query_tokens, teacher_tokens = scrub(query_tokens, teacher_tokens)
+        self.items.append({"query": query_tokens, "teacher": teacher_tokens,
+                           "meta": meta or {}})
+        if len(self.items) > self.capacity:
+            self.items.pop(0)
+
+    def sample(self, rng, batch: int):
+        idx = rng.choice(len(self.items), size=min(batch, len(self.items)),
+                         replace=False)
+        return [self.items[i] for i in idx]
+
+
+def distill_loss(lora_params: dict, base_params: dict, cfg: ModelConfig,
+                 batch: dict, teacher_logits: Array, *,
+                 kl_weight: float = 0.5, temperature: float = 2.0) -> Array:
+    """KL(teacher || student) at temperature + hard-target CE, LoRA-only."""
+    params = lora_lib.merge(base_params, lora_params)
+    logits, _ = T.forward(params, cfg, batch)
+    sl = jax.nn.log_softmax(logits.astype(jnp.float32) / temperature, -1)
+    tl = jax.nn.softmax(teacher_logits.astype(jnp.float32) / temperature, -1)
+    mask = batch.get("loss_mask")
+    kl = -(tl * sl).sum(-1)
+    ce = -jnp.take_along_axis(
+        jax.nn.log_softmax(logits.astype(jnp.float32), -1),
+        batch["labels"][..., None], axis=-1)[..., 0]
+    per = kl_weight * kl * temperature ** 2 + (1 - kl_weight) * ce
+    if mask is not None:
+        return (per * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return per.mean()
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr"))
+def distill_step(lora_params: dict, base_params: dict, cfg: ModelConfig,
+                 batch: dict, teacher_logits: Array, lr: float = 1e-3):
+    loss, grads = jax.value_and_grad(distill_loss)(
+        lora_params, base_params, cfg, batch, teacher_logits)
+    lora_params = jax.tree.map(lambda p, g: p - lr * g, lora_params, grads)
+    return lora_params, loss

@@ -1,0 +1,60 @@
+"""State-action-environment view of routing (paper Sec. IV-A, Eq. 1).
+
+The paper implements a threshold policy and leaves learned policies to
+future work; we provide the reward signal (Eq. 1) and the historical
+accuracy statistics used to approximate E[Acc(Q,d)] (Eq. 11) conditioned on
+difficulty and risk — enough substrate for an offline-RL extension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RewardWeights:
+    acc: float = 1.0
+    lat: float = 0.05       # per second
+    cost: float = 1e4       # per dollar
+    pol: float = 2.0        # policy-violation penalty
+
+
+def reward(acc_hat: Array, latency: Array, cost: Array,
+           violation: Array, w: RewardWeights) -> Array:
+    """Eq. 1: r_t = λacc·Acc − λlat·Lat − λcost·Cost − λpol·1[violation]."""
+    return (w.acc * acc_hat - w.lat * latency - w.cost * cost
+            - w.pol * violation.astype(jnp.float32))
+
+
+class AccuracyStats(NamedTuple):
+    """Historical P(correct | difficulty bin, risk, action) (Eq. 11 approx)."""
+    counts: Array    # (bins, 2, actions)
+    correct: Array   # (bins, 2, actions)
+
+    @staticmethod
+    def init(bins: int = 8, actions: int = 5) -> "AccuracyStats":
+        z = jnp.zeros((bins, 2, actions), jnp.float32)
+        return AccuracyStats(counts=z, correct=z)
+
+    def update(self, u: Array, risk: Array, action: Array,
+               was_correct: Array) -> "AccuracyStats":
+        bins = self.counts.shape[0]
+        b = jnp.clip((u * bins).astype(jnp.int32), 0, bins - 1)
+        idx = (b, risk.astype(jnp.int32), action.astype(jnp.int32))
+        return AccuracyStats(
+            counts=self.counts.at[idx].add(1.0),
+            correct=self.correct.at[idx].add(was_correct.astype(jnp.float32)))
+
+    def estimate(self, u: Array, risk: Array, action: Array,
+                 prior: float = 0.5, strength: float = 2.0) -> Array:
+        bins = self.counts.shape[0]
+        b = jnp.clip((u * bins).astype(jnp.int32), 0, bins - 1)
+        idx = (b, risk.astype(jnp.int32), action.astype(jnp.int32))
+        c, k = self.correct[idx], self.counts[idx]
+        return (c + prior * strength) / (k + strength)

@@ -1,0 +1,49 @@
+"""Privacy exposure metrics CER / TER / SER (paper Sec. VII-C, Eq. 15-17).
+
+All three are computed from gateway decision logs and normalised so the
+cloud-only architecture equals 1.0 (lower is better).  Edge-only is
+identically 0 (no cloud calls) and omitted from Table V, matching the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.router import CLOUD, CLOUD_SAFETY
+
+Array = jnp.ndarray
+
+
+class PrivacyMetrics(NamedTuple):
+    cer: Array   # Eq. 15, normalised to cloud-only
+    ter: Array   # Eq. 16
+    ser: Array   # Eq. 17
+
+
+def _is_exposed(decision: Array) -> Array:
+    return (decision == CLOUD) | (decision == CLOUD_SAFETY)
+
+
+def privacy_metrics(decision: Array, prompt_len: Array,
+                    is_safety: Array) -> PrivacyMetrics:
+    """decision (Q,) codes; prompt_len (Q,) chars (paper's token proxy);
+    is_safety (Q,) bool marks the safety subset (SER proxy, Eq. 17)."""
+    exposed = _is_exposed(decision).astype(jnp.float32)
+    # Cloud-only baseline sends every prompt -> normalisers are 1.0-rates.
+    cer = exposed.mean()                                          # Eq. 15
+    plen = prompt_len.astype(jnp.float32)
+    ter = (plen * exposed).sum() / jnp.maximum(plen.sum(), 1.0)   # Eq. 16
+    saf = is_safety.astype(jnp.float32)
+    ser = (saf * exposed).sum() / jnp.maximum(saf.sum(), 1.0)     # Eq. 17
+    return PrivacyMetrics(cer=cer, ter=ter, ser=ser)
+
+
+def reductions(m: PrivacyMetrics) -> dict:
+    """Table V 'Reduction vs. Cloud-Only' column (%)."""
+    return {
+        "CER": float((1.0 - m.cer) * 100.0),
+        "TER": float((1.0 - m.ter) * 100.0),
+        "SER": float((1.0 - m.ser) * 100.0),
+    }

@@ -1,0 +1,119 @@
+"""Threshold routing policy + Algorithm 1 (paper Sec. IV-F/IV-G).
+
+Two-phase batched decision process, faithful to the prototype's sequential
+semantics:
+
+  Phase A (`route`): from difficulty U, risk R, WAN state, latency estimates
+  and the hard cloud budget, assign each query LOCAL / SWARM / CLOUD /
+  REFUSE.  Cloud admission is budget-sequential (Eq. 13 via
+  ``budget.charge_batch``).
+
+  Phase B (`post_consensus`): after the swarm round, queries whose best
+  cluster score S(a*) < γ escalate to cloud (budget/WAN permitting) or keep
+  the best-effort swarm answer (Algorithm 1 lines 15-23).
+
+Decision codes double as the D(q) values of the privacy metrics (Eq. 15-17):
+CLOUD and CLOUD_SAFETY both mean the raw prompt left the trust boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.budget import BudgetState, charge_batch
+
+Array = jax.Array
+
+LOCAL, SWARM, CLOUD, CLOUD_SAFETY, REFUSE = 0, 1, 2, 3, 4
+DECISION_NAMES = ("local", "swarm", "cloud", "cloud_safety", "refuse")
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    # Table I defaults
+    tau_low: float = 0.35
+    tau_high: float = 0.65
+    sigma: float = 0.7
+    peers_k: int = 3
+    gamma: float = 0.6
+    l_max: float = 0.5                # seconds
+    # Sec. V-C "final experiments" preset
+    @staticmethod
+    def final() -> "RouterConfig":
+        return RouterConfig(tau_low=0.08, tau_high=0.22, peers_k=2,
+                            gamma=0.3, l_max=4.0)
+
+
+class RouteResult(NamedTuple):
+    decision: Array        # (B,) int32 decision codes
+    risk: Array            # (B,) int32 R(Q)
+    budget: BudgetState
+
+
+def route(u: Array, safety_s: Array, *, cfg: RouterConfig,
+          budget: BudgetState, wan_ok: Array,
+          est_cloud_cost: Array,
+          l_edge: Array | None = None,
+          l_cloud: Array | None = None) -> RouteResult:
+    """Phase A of Algorithm 1. All inputs (B,)-shaped; wan_ok () or (B,) bool."""
+    B = u.shape[0]
+    wan_ok = jnp.broadcast_to(jnp.asarray(wan_ok, bool), (B,))
+    risk = (safety_s > cfg.sigma).astype(jnp.int32)            # Eq. 6
+
+    wants_cloud = (risk == 1) | (u >= cfg.tau_high)
+    # latency gating: local path violating L_max prefers cloud when cloud
+    # meets the deadline (objective O1)
+    if l_edge is not None and l_cloud is not None:
+        bump = (l_edge > cfg.l_max) & (l_cloud <= cfg.l_max)
+        wants_cloud |= bump
+
+    admitted, budget = charge_batch(budget, est_cloud_cost,
+                                    wants_cloud & wan_ok)
+    is_cloud = wants_cloud & admitted & wan_ok
+
+    # risk-flagged but cloud unavailable -> best-effort refusal (Alg.1 l.6)
+    refuse = (risk == 1) & ~is_cloud
+    # denied non-risk cloud aspirants fall back to swarm (O5 chain)
+    fallback_swarm = wants_cloud & ~is_cloud & (risk == 0)
+    is_swarm = ((u >= cfg.tau_low) & (u < cfg.tau_high) & (risk == 0)
+                ) | fallback_swarm
+
+    decision = jnp.full((B,), LOCAL, jnp.int32)
+    decision = jnp.where(is_swarm, SWARM, decision)
+    decision = jnp.where(is_cloud & (risk == 0), CLOUD, decision)
+    decision = jnp.where(is_cloud & (risk == 1), CLOUD_SAFETY, decision)
+    decision = jnp.where(refuse, REFUSE, decision)
+    return RouteResult(decision=decision, risk=risk, budget=budget)
+
+
+class PostConsensusResult(NamedTuple):
+    decision: Array        # (B,) final decision codes
+    use_swarm_answer: Array  # (B,) bool: keep best-effort swarm answer
+    budget: BudgetState
+
+
+def post_consensus(decision: Array, consensus_score: Array, *,
+                   cfg: RouterConfig, budget: BudgetState, wan_ok: Array,
+                   est_cloud_cost: Array) -> PostConsensusResult:
+    """Phase B: escalate under-consensus swarm queries (Alg. 1 lines 15-23)."""
+    B = decision.shape[0]
+    wan_ok = jnp.broadcast_to(jnp.asarray(wan_ok, bool), (B,))
+    was_swarm = decision == SWARM
+    weak = was_swarm & (consensus_score < cfg.gamma)
+    admitted, budget = charge_batch(budget, est_cloud_cost, weak & wan_ok)
+    escalate = weak & admitted & wan_ok
+    new_decision = jnp.where(escalate, CLOUD, decision)
+    use_swarm_answer = was_swarm & ~escalate
+    return PostConsensusResult(decision=new_decision,
+                               use_swarm_answer=use_swarm_answer,
+                               budget=budget)
+
+
+def summoning_rate(decision: Array) -> Array:
+    """Fraction escalated to the FM (metric 3, Sec. VI-B)."""
+    cloud = (decision == CLOUD) | (decision == CLOUD_SAFETY)
+    return cloud.astype(jnp.float32).mean()

@@ -1,0 +1,100 @@
+"""Safety / policy risk classifier C_safety (paper Sec. IV-C, Eq. 5-6).
+
+A compact bidirectional transformer (the paper suggests exactly this) built
+on the shared model substrate: token embeddings -> 2 encoder blocks ->
+masked mean-pool -> linear -> sigmoid risk score s ∈ [0,1].
+R(Q) = 1[s > σ] (Eq. 6).
+
+``train_step`` lets the examples/tests fit the classifier on the synthetic
+safety workload so the routing experiments exercise a *learned* gate, not a
+keyword oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig, ParamDef, abstract_tree, axes_tree, init_tree, normal_init, zeros_init
+
+Array = jax.Array
+
+
+def classifier_config(vocab_size: int = 2048, d_model: int = 128,
+                      num_layers: int = 2) -> ModelConfig:
+    return ModelConfig(
+        name="c-safety", family="encoder",
+        num_layers=num_layers, d_model=d_model,
+        num_heads=4, num_kv_heads=4, head_dim=d_model // 4,
+        d_ff=4 * d_model, vocab_size=vocab_size,
+        causal=False, ffn_act="gelu",
+        attn_q_block=64, attn_kv_block=64, scan_layers=True,
+    )
+
+
+def safety_defs(cfg: ModelConfig) -> dict:
+    base = T.model_defs(cfg)
+    base.pop("lm_head", None)
+    base["head_w"] = ParamDef((cfg.d_model, 1), ("embed", None), normal_init())
+    base["head_b"] = ParamDef((1,), (None,), zeros_init)
+    return base
+
+
+def init_safety(cfg: ModelConfig, key: jax.Array) -> dict:
+    return init_tree(safety_defs(cfg), key, cfg.dtype)
+
+
+def safety_score(params: dict, cfg: ModelConfig, tokens: Array,
+                 mask: Array | None = None) -> Array:
+    """tokens (B, S) -> s (B,) ∈ [0,1].  Eq. 5.  PAD=0 excluded from pool."""
+    if mask is None:
+        mask = (tokens > 0).astype(jnp.float32)
+    x = T.embed_inputs(params, cfg, {"tokens": jnp.maximum(tokens, 0)})
+    for sp, stage in zip(params["stages"], cfg.stage_plan()):
+        x, _ = T._run_stage(sp, x, cfg, stage, 1, None, None)
+    xf = x.astype(jnp.float32) * mask[..., None]
+    pooled = xf.sum(1) / jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+    logit = pooled @ params["head_w"].astype(jnp.float32) + params["head_b"]
+    return jax.nn.sigmoid(logit[..., 0])
+
+
+def risk_flag(s: Array, sigma: float) -> Array:
+    """Eq. 6: R(Q) = 1[s > σ]."""
+    return (s > sigma).astype(jnp.int32)
+
+
+def bce_loss(params: dict, cfg: ModelConfig, tokens: Array, labels: Array) -> Array:
+    s = safety_score(params, cfg, tokens)
+    s = jnp.clip(s, 1e-6, 1 - 1e-6)
+    y = labels.astype(jnp.float32)
+    return -(y * jnp.log(s) + (1 - y) * jnp.log(1 - s)).mean()
+
+
+def make_trainer(cfg: ModelConfig, lr: float = 1e-2, steps: int = 200):
+    """AdamW trainer for the classifier (tiny models need adaptive lr)."""
+    from repro.training import optimizer as opt
+    ocfg = opt.AdamWConfig(lr=lr, total_steps=steps, warmup_steps=10,
+                           weight_decay=0.0)
+
+    @jax.jit
+    def step(params, state, tokens, labels):
+        loss, grads = jax.value_and_grad(bce_loss)(params, cfg, tokens, labels)
+        params, state, _ = opt.apply(grads, params, state, ocfg)
+        return params, state, loss
+
+    return step
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr"))
+def train_step(params: dict, cfg: ModelConfig, tokens: Array, labels: Array,
+               lr: float = 1e-3):
+    """Plain-SGD step (kept for tests; prefer make_trainer)."""
+    loss, grads = jax.value_and_grad(bce_loss)(params, cfg, tokens, labels)
+    params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)
+    return params, loss

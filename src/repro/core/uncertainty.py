@@ -1,0 +1,118 @@
+"""Difficulty / uncertainty quantification (paper Sec. IV-B, Eq. 2-4).
+
+Paper-faithful definitions:
+
+  Eq. 2  H_i(t)  = -(1/N) Σ_j P(t_j | t_<j, Q) · log P(t_j | t_<j, Q)
+         — note: the *generated* token's probability, not full-distribution
+         entropy.  We also provide `mode="distribution"` (full softmax
+         entropy, normalised by log V) as a beyond-paper alternative.
+
+  Eq. 3  V_i(Q) = (1/N) Σ_j Var(z_j^(k))      (top-k logits variance)
+
+  Eq. 4  U_i(Q) = α · H_i(t) + (1-α) · V̂_i(Q),  V̂ normalised to [0,1]
+
+The paper does not specify the V normalisation; we use the bounded squash
+V̂ = V / (V + v_scale) (documented in EXPERIMENTS.md).  The fused Pallas
+kernel `repro.kernels.swarm_uncertainty` computes the per-position terms in
+one pass over vocab blocks; this module is the jnp reference / CPU path and
+the public API.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class UncertaintyConfig:
+    alpha: float = 0.5          # Eq. 4 mixing weight
+    top_k: int = 10             # Eq. 3 top-k logits
+    v_scale: float = 25.0       # V̂ = V / (V + v_scale)
+    mode: str = "token"         # "token" (paper Eq. 2) | "distribution"
+    invert_variance: bool = False  # beyond-paper: top-k logit variance is a
+    # CONFIDENCE signal (peaked logits -> high Var); Eq. 4 as written adds it
+    # positively to difficulty.  True uses (1 - V̂) so both terms point the
+    # same way.  Default False = paper-faithful. See DESIGN.md §Fidelity.
+    use_kernel: bool = False    # route through the Pallas kernel
+
+
+def token_nent(logits: Array, tokens: Array) -> Array:
+    """-p·log p of the chosen token. logits (..., N, V), tokens (..., N)."""
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    lp = jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    p = jnp.exp(lp)
+    return -p * lp                                     # (..., N), in [0, 1/e]
+
+
+def dist_entropy(logits: Array) -> Array:
+    """Full softmax entropy per position, normalised by log V to [0,1]."""
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    h = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return h / jnp.log(logits.shape[-1])
+
+
+def topk_logit_variance(logits: Array, k: int) -> Array:
+    """Var over the top-k logits at each position (Eq. 3). (..., N)."""
+    z, _ = jax.lax.top_k(logits.astype(jnp.float32), k)
+    return jnp.var(z, axis=-1)
+
+
+def sequence_entropy(logits: Array, tokens: Array, mask: Array | None = None,
+                     mode: str = "token") -> Array:
+    """Eq. 2 averaged over valid positions. Returns (...)."""
+    per = token_nent(logits, tokens) if mode == "token" else dist_entropy(logits)
+    if mask is None:
+        return per.mean(axis=-1)
+    m = mask.astype(jnp.float32)
+    return (per * m).sum(-1) / jnp.maximum(m.sum(-1), 1.0)
+
+
+def mean_logit_variance(logits: Array, k: int, mask: Array | None = None) -> Array:
+    per = topk_logit_variance(logits, k)
+    if mask is None:
+        return per.mean(axis=-1)
+    m = mask.astype(jnp.float32)
+    return (per * m).sum(-1) / jnp.maximum(m.sum(-1), 1.0)
+
+
+def normalise_variance(v: Array, v_scale: float) -> Array:
+    return v / (v + v_scale)
+
+
+def difficulty(logits: Array, tokens: Array, cfg: UncertaintyConfig,
+               mask: Array | None = None) -> Array:
+    """Eq. 4 scalar difficulty score U ∈ [0,1]. logits (..., N, V)."""
+    if cfg.use_kernel:
+        from repro.kernels.swarm_uncertainty import ops as kops
+        h_per, v_per = kops.uncertainty_terms(
+            logits, tokens, k=cfg.top_k, mode=cfg.mode)
+    else:
+        h_per = (token_nent(logits, tokens) if cfg.mode == "token"
+                 else dist_entropy(logits))
+        v_per = topk_logit_variance(logits, cfg.top_k)
+    if mask is None:
+        h, v = h_per.mean(-1), v_per.mean(-1)
+    else:
+        m = mask.astype(jnp.float32)
+        d = jnp.maximum(m.sum(-1), 1.0)
+        h, v = (h_per * m).sum(-1) / d, (v_per * m).sum(-1) / d
+    if cfg.mode == "token":
+        h = h * jnp.exp(1.0)       # rescale [0, 1/e] -> [0, 1]
+    v_hat = normalise_variance(v, cfg.v_scale)
+    if cfg.invert_variance:
+        v_hat = 1.0 - v_hat
+    return cfg.alpha * h + (1.0 - cfg.alpha) * v_hat
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def difficulty_jit(logits: Array, tokens: Array, cfg: UncertaintyConfig,
+                   mask: Array | None = None) -> Array:
+    return difficulty(logits, tokens, cfg, mask)

@@ -1,0 +1,93 @@
+"""GQA decode-attention kernel: one query token vs a (ring) KV cache.
+
+Decode is bandwidth-bound: arithmetic intensity ≈ 2 flops/byte of cache.
+The kernel streams KV blocks through VMEM once per (batch, kv-head) pair
+with all G query heads of the group resident, so cache bytes are read
+exactly once (vs ≥2x for the unfused softmax path).  Ring-buffer validity
+and the sliding window are handled via the cached absolute positions.
+
+Grid: (B, K, T/bt), cache blocks innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, idx_ref, o_ref,
+                   m_ref, l_ref, acc_ref,
+                   *, bt: int, nt: int, window: int | None, scale: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bt, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    pos = pos_ref[0]                                  # (bt,) cached abs pos
+    idx = idx_ref[0]                                  # () current position
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= idx)
+    if window is not None:
+        valid &= idx - pos < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_old, l_old = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_old, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_old - m_new)
+    l_ref[...] = l_old * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            pos: jax.Array, index: jax.Array, *,
+                            window: int | None = None, bt: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q (B,K,G,D); k,v (B,T,K,D); pos (B,T); index (B,). -> (B,K,G,D)."""
+    B, K, G, D = q.shape
+    T = k.shape[1]
+    bt = min(bt, T)
+    assert T % bt == 0
+    grid = (B, K, T // bt)
+    kern = functools.partial(_decode_kernel, bt=bt, nt=T // bt,
+                             window=window, scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+            pl.BlockSpec((1, bt, 1, D), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bt, 1, D), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, bt), lambda b, h, t: (b, t)),
+            pl.BlockSpec((1,), lambda b, h, t: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(B, K, G, D), k, v, pos, index)

@@ -1,0 +1,20 @@
+"""Jitted wrapper for decode attention: Pallas on TPU, oracle elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention import kernel as K
+from repro.kernels.decode_attention import ref as R
+
+
+@partial(jax.jit, static_argnames=("window", "bt", "force_pallas"))
+def decode_attention(q, k, v, pos, index, *, window=None, bt=512,
+                     force_pallas=False):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return K.decode_attention_pallas(
+            q, k, v, pos, index, window=window, bt=bt,
+            interpret=jax.default_backend() != "tpu")
+    return R.decode_attention_ref(q, k, v, pos, index, window=window)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, index, *, window=None):
+    """q (B,K,G,D); k,v (B,T,K,D); pos (B,T); index (B,) -> (B,K,G,D)."""
+    B, K, G, D = q.shape
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D ** -0.5
+    valid = (pos >= 0) & (pos <= index[:, None])
+    if window is not None:
+        valid &= index[:, None] - pos < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,110 @@
+"""Flash-attention prefill kernel (causal/local GQA) — TPU target.
+
+Online-softmax over KV blocks with VMEM scratch carry; MXU-aligned tiles
+(bq, bk multiples of 128 at production shapes, head_dim 64-256).  Causal
+runs skip fully-masked KV blocks (the grid still visits them, but the body
+is ``pl.when``-gated so no MXU work is issued) and the output tile is
+written at the last *needed* block — the same block-skipping that makes a
+real TPU flash kernel ~2x over dense for causal.
+
+Grid: (B, H, S/bq, T/bk), KV innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bk: int, nk: int, causal: bool,
+                  window: int | None, scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    q_start = i * bq
+    k_start = j * bk
+
+    last_needed = nk - 1
+    if causal:
+        last_needed = jnp.minimum(nk - 1, (q_start + bq - 1) // bk)
+    needed = j <= last_needed
+    if window is not None:
+        needed &= (k_start + bk - 1) >= (q_start - window + 1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_old, l_old = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_old, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_old - m_new)
+        l_ref[...] = l_old * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == last_needed)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           bq: int = 256, bk: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """q (B,S,H,D); k,v (B,T,K,D) with H = K*G. Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    grid = (B, H, S // bq, T // bk)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=T // bk, causal=causal,
+        window=window, scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,21 @@
+"""Jitted wrapper for flash attention: Pallas on TPU, oracle elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "force_pallas"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=256, bk=256,
+                    force_pallas=False):
+    if jax.default_backend() == "tpu" or force_pallas:
+        return K.flash_attention_pallas(
+            q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+            interpret=jax.default_backend() != "tpu")
+    return R.flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,127 @@
+"""Fused uncertainty-probe kernel (paper Eq. 2-3) — the SWARM-LLM hot spot.
+
+For every decoded position the gateway needs (i) the chosen-token
+-p·log p term (Eq. 2), optionally full-distribution entropy, and (ii) the
+top-k logit variance (Eq. 3).  Done naively that is 3 passes over the
+(N, V) logits in HBM (softmax, gather, top_k) — V is up to 256k for the
+assigned archs, so the probe is pure memory traffic.  This kernel streams
+vocab blocks through VMEM once and keeps all running statistics
+(online max / sum-exp / Σz·e^z / chosen logit / top-k buffer) in VMEM
+scratch: a single HBM read of the logits, vocab-block tiles aligned to the
+(8,128) VPU lanes.
+
+Grid: (B, N/bn, V/bv), vocab innermost (sequential reduction on TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _select_topk(cand: jax.Array, k: int) -> jax.Array:
+    """Row-wise top-k of cand (R, C) via k unrolled max+mask steps (no sort —
+    Mosaic-friendly, exact under ties)."""
+    R, C = cand.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    out = []
+    work = cand
+    for _ in range(k):
+        cur = work.max(axis=1)
+        am = work.argmax(axis=1)
+        out.append(cur)
+        work = jnp.where(cols == am[:, None], NEG_INF, work)
+    return jnp.stack(out, axis=1)  # (R, k)
+
+
+def _uncertainty_kernel(logits_ref, tokens_ref, h_ref, v_ref, hd_ref,
+                        m_ref, l_ref, s_ref, chosen_ref, topk_ref,
+                        *, k: int, bv: int, nv: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        chosen_ref[...] = jnp.full_like(chosen_ref, NEG_INF)
+        topk_ref[...] = jnp.full_like(topk_ref, NEG_INF)
+
+    blk = logits_ref[0].astype(jnp.float32)            # (bn, bv)
+    tok = tokens_ref[0]                                # (bn,)
+
+    # --- online logsumexp (+ Σ z·e^z for distribution entropy) ---
+    m_old, l_old, s_old = m_ref[...], l_ref[...], s_ref[...]
+    m_new = jnp.maximum(m_old, blk.max(axis=1))
+    corr = jnp.exp(m_old - m_new)
+    e = jnp.exp(blk - m_new[:, None])
+    l_ref[...] = l_old * corr + e.sum(axis=1)
+    s_ref[...] = s_old * corr + (e * blk).sum(axis=1)
+    m_ref[...] = m_new
+
+    # --- chosen-token logit (Eq. 2 numerator) ---
+    lo = j * bv
+    idx_local = jnp.clip(tok - lo, 0, bv - 1)
+    val = jnp.take_along_axis(blk, idx_local[:, None], axis=1)[:, 0]
+    in_blk = (tok >= lo) & (tok < lo + bv)
+    chosen_ref[...] = jnp.where(in_blk, val, chosen_ref[...])
+
+    # --- running top-k merge (Eq. 3) ---
+    blk_topk = _select_topk(blk, k)
+    cand = jnp.concatenate([topk_ref[...], blk_topk], axis=1)
+    topk_ref[...] = _select_topk(cand, k)
+
+    @pl.when(j == nv - 1)
+    def _finalize():
+        m, l, s = m_ref[...], l_ref[...], s_ref[...]
+        log_l = jnp.log(jnp.maximum(l, 1e-30))
+        logp = chosen_ref[...] - m - log_l
+        p = jnp.exp(logp)
+        h_ref[0] = -p * logp                               # Eq. 2 per-position
+        hd_ref[0] = (log_l + m - s / jnp.maximum(l, 1e-30)) \
+            / jnp.log(jnp.float32(nv * bv))                # full-dist entropy
+        t = topk_ref[...]
+        mean = t.mean(axis=1)
+        v_ref[0] = (t * t).mean(axis=1) - mean * mean      # Eq. 3 per-position
+
+
+def uncertainty_pallas(logits: jax.Array, tokens: jax.Array, *, k: int = 10,
+                       bn: int = 8, bv: int = 2048,
+                       interpret: bool = True):
+    """logits (B,N,V), tokens (B,N) -> (h_token, v_topk, h_dist), each (B,N)."""
+    B, N, V = logits.shape
+    bn = min(bn, N)
+    bv = min(bv, V)
+    assert N % bn == 0 and V % bv == 0, (N, bn, V, bv)
+    grid = (B, N // bn, V // bv)
+    kern = functools.partial(_uncertainty_kernel, k=k, bv=bv, nv=V // bv)
+    out_shape = [jax.ShapeDtypeStruct((B, N), jnp.float32)] * 3
+    h, v, hd = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bn, bv), lambda b, i, j: (b, i, j)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bn), lambda b, i, j: (b, i)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),       # m
+            pltpu.VMEM((bn,), jnp.float32),       # l
+            pltpu.VMEM((bn,), jnp.float32),       # s = Σ z e^z
+            pltpu.VMEM((bn,), jnp.float32),       # chosen logit
+            pltpu.VMEM((bn, k), jnp.float32),     # top-k buffer
+        ],
+        interpret=interpret,
+    )(logits, tokens)
+    return h, v, hd

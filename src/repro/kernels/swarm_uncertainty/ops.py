@@ -1,0 +1,30 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, oracle elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swarm_uncertainty import kernel as K
+from repro.kernels.swarm_uncertainty import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("k", "mode", "force_pallas"))
+def uncertainty_terms(logits: jax.Array, tokens: jax.Array, *, k: int = 10,
+                      mode: str = "token", force_pallas: bool = False):
+    """Per-position (entropy_term, topk_variance). logits (..., N, V)."""
+    shape = logits.shape
+    lg = logits.reshape((-1,) + shape[-2:])
+    tk = tokens.reshape((-1, shape[-2]))
+    if _on_tpu() or force_pallas:
+        h, v, hd = K.uncertainty_pallas(lg, tk, k=k, interpret=not _on_tpu())
+    else:
+        h, v, hd = R.uncertainty_ref(lg, tk, k=k)
+    h_out = h if mode == "token" else hd
+    return h_out.reshape(shape[:-1]), v.reshape(shape[:-1])

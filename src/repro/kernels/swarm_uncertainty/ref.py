@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused uncertainty kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def uncertainty_ref(logits: jax.Array, tokens: jax.Array, *, k: int = 10):
+    """logits (B,N,V), tokens (B,N) -> (h_token, v_topk, h_dist), (B,N) f32."""
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    lp = jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    p = jnp.exp(lp)
+    h_token = -p * lp
+
+    z, _ = jax.lax.top_k(lf, k)
+    v_topk = jnp.var(z, axis=-1)
+
+    h_dist = -jnp.sum(jnp.exp(logp) * logp, axis=-1) / jnp.log(lf.shape[-1])
+    return h_token, v_topk, h_dist

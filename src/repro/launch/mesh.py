@@ -1,0 +1,47 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Axes:
+
+  pod   — failure/locality domain (the paper's "edge site"); crosses the
+          slow (DCN/WAN-class) links where gradient compression applies
+  data  — FSDP / batch parallelism (fast ICI)
+  model — tensor/expert parallelism (fast ICI)
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def elastic_mesh(model_parallel: int = 16, pods: int = 1):
+    """Build the largest (pod, data, model) mesh the live devices support —
+    restore-time elasticity: a checkpoint re-shards onto whatever is alive."""
+    n = len(jax.devices())
+    model_parallel = min(model_parallel, n)
+    while n % model_parallel:
+        model_parallel //= 2
+    rest = n // model_parallel
+    pods = min(pods, rest)
+    while rest % pods:
+        pods -= 1
+    data = rest // pods
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def data_shards(mesh) -> int:
+    """Number of batch shards = product of pod/data axis sizes."""
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n

@@ -1,0 +1,219 @@
+"""GQA attention: chunked online-softmax (flash-equivalent in XLA) + decode.
+
+The training/prefill path is a two-level ``lax.scan`` over (q blocks, kv
+blocks) with a streaming softmax, so the compiled HLO never materialises the
+(S, T) score matrix — the memory_analysis of the dry-run therefore reflects
+flash-attention behaviour.  The Pallas kernel in ``repro.kernels.
+flash_attention`` is the TPU-target implementation of the same math and is
+validated against ``repro.kernels.flash_attention.ref`` (which in turn is
+validated against this module in tests).
+
+Decode attends one new token against a (possibly ring-buffered) KV cache.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, apply_rope,
+                                 norm_def, normal_init, rmsnorm, rope_angles,
+                                 zeros_init)
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    D, H, K, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    defs = {
+        "norm": norm_def(D),
+        "wq": ParamDef((D, H, Dh), ("embed", "heads", "head_dim"), normal_init()),
+        "wk": ParamDef((D, K, Dh), ("embed", "kv_heads", "head_dim"), normal_init()),
+        "wv": ParamDef((D, K, Dh), ("embed", "kv_heads", "head_dim"), normal_init()),
+        "wo": ParamDef((H, Dh, D), ("heads", "head_dim", "embed"), normal_init(std_o)),
+    }
+    if cfg.attn_bias:
+        defs["bq"] = ParamDef((H, Dh), ("bias_heads", "head_dim"), zeros_init)
+        defs["bk"] = ParamDef((K, Dh), ("kv_heads", "head_dim"), zeros_init)
+        defs["bv"] = ParamDef((K, Dh), ("kv_heads", "head_dim"), zeros_init)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (full sequence)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: Array, k: Array, v: Array, *,
+                      q_positions: Array, kv_positions: Array,
+                      causal: bool, window: int | None,
+                      q_block: int, kv_block: int) -> Array:
+    """q (B,S,H,Dh); k,v (B,T,K,Dh); positions (S,)/(T,).  Returns (B,S,H,Dh).
+
+    Streaming softmax in f32; GQA via head-group folding.  Wrapped in
+    jax.checkpoint per q-block so training memory stays O(S * Dh).
+    """
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    assert S % qb == 0 and T % kb == 0, (S, qb, T, kb)
+    nq, nk = S // qb, T // kb
+    scale = Dh ** -0.5
+
+    qr = q.reshape(B, nq, qb, K, G, Dh).astype(jnp.bfloat16).swapaxes(0, 1)
+    qpos = q_positions.reshape(nq, qb)
+    kr = k.reshape(B, nk, kb, K, Dh).astype(jnp.bfloat16).swapaxes(0, 1)
+    vr = v.reshape(B, nk, kb, K, Dh).astype(jnp.bfloat16).swapaxes(0, 1)
+    kpos = kv_positions.reshape(nk, kb)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def q_step(_, blk):
+        qblk, qp = blk                          # (B,qb,K,G,Dh), (qb,)
+
+        def kv_step(carry, kv):
+            acc, m, l = carry                   # acc (B,K,G,qb,Dh) f32
+            kblk, vblk, kp = kv
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qb, kb), jnp.bool_)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            mask &= kp[None, :] >= 0            # ring-buffer empty slots
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))      # (B,K,G,qb)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(jnp.bfloat16), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, K, G, qb, Dh), jnp.float32)
+        m0 = jnp.full((B, K, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qb), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (kr, vr, kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)        # (B,K,G,qb,Dh)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, qpos))
+    # outs: (nq, B, K, G, qb, Dh) -> (B, S, H, Dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, Dh)
+    return out
+
+
+def plain_attention(q: Array, k: Array, v: Array, *, q_positions, kv_positions,
+                    causal: bool, window: int | None) -> Array:
+    """Reference O(S*T)-memory attention (small shapes / oracle)."""
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qr = q.reshape(B, S, K, G, Dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (Dh ** -0.5)
+    mask = jnp.ones((S, k.shape[1]), jnp.bool_)
+    if causal:
+        mask &= q_positions[:, None] >= kv_positions[None, :]
+    if window is not None:
+        mask &= q_positions[:, None] - kv_positions[None, :] < window
+    mask &= kv_positions[None, :] >= 0
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence) and decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array          # (B, T, K, Dh)
+    v: Array          # (B, T, K, Dh)
+    pos: Array        # (B, T) absolute positions of cached keys, -1 = empty
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, length: int, local: bool) -> KVCache:
+    if local and cfg.window is not None:
+        length = min(length, cfg.window)
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, length, K, Dh), cfg.dtype),
+        v=jnp.zeros((batch, length, K, Dh), cfg.dtype),
+        pos=jnp.full((batch, length), -1, jnp.int32),
+    )
+
+
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
+    """x (B,S,D), positions (B,S) -> q (B,S,H,Dh), k/v (B,S,K,Dh), roped."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos[..., None, :], sin[..., None, :])
+    k = apply_rope(k, cos[..., None, :], sin[..., None, :])
+    return q, k, v
+
+
+def attn_block(p: dict, x: Array, cfg: ModelConfig, *, local: bool,
+               positions: Array | None = None) -> Array:
+    """Pre-norm residual attention over a full sequence. x (B,S,D)."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    out = chunked_attention(
+        q, k, v,
+        q_positions=positions[0], kv_positions=positions[0],
+        causal=cfg.causal, window=cfg.window if local else None,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + y
+
+
+def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
+                cfg: ModelConfig, *, local: bool) -> tuple[Array, KVCache]:
+    """One-token decode. x (B,1,D); index (B,) absolute position of new token."""
+    B = x.shape[0]
+    T = cache.k.shape[1]
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = _project_qkv(p, h, cfg, index[:, None])
+    slot = index % T if (local and cfg.window is not None) else index
+    b = jnp.arange(B)
+    cache = KVCache(
+        k=cache.k.at[b, slot].set(k_new[:, 0].astype(cache.k.dtype)),
+        v=cache.v.at[b, slot].set(v_new[:, 0].astype(cache.v.dtype)),
+        pos=cache.pos.at[b, slot].set(index.astype(jnp.int32)),
+    )
+    G = cfg.num_heads // cfg.num_kv_heads
+    qr = q.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
+    # bf16 operands + f32 accumulation: never materialise an f32 cache copy
+    s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(cfg.comp_dtype), cache.k,
+                   preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
+    mask = (cache.pos <= index[:, None]) & (cache.pos >= 0)
+    if local and cfg.window is not None:
+        mask &= index[:, None] - cache.pos < cfg.window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cfg.comp_dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + y, cache

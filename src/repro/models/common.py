@@ -1,0 +1,276 @@
+"""Shared model substrate: config, param definitions, norms, RoPE, init.
+
+Pure JAX (no flax): parameters are nested dicts of arrays.  Every model
+module exposes three parallel builders:
+
+  * ``*_defs(cfg)``   -> dict[name, ParamDef]  (shape, logical axes, init)
+  * materialise with ``init_tree`` (real arrays) or ``abstract_tree``
+    (ShapeDtypeStruct — used by the multi-pod dry-run so that a 110B model
+    never allocates host memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encoder | vlm | audio
+
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    vocab_size: int = 256
+
+    # attention
+    attn_bias: bool = False            # qwen-style QKV bias
+    rope_theta: float = 10_000.0
+    causal: bool = True                # False => bidirectional encoder
+    window: int | None = None          # sliding-window size for "attn_local"
+    mixer_pattern: tuple[str, ...] = ("attn",)   # cycled per layer
+
+    # ffn
+    ffn_act: str = "swiglu"            # swiglu | geglu | gelu
+
+    # moe
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    first_k_dense: int = 0             # deepseek: leading dense layers
+    moe_every: int = 1                 # moe on layers where (i % moe_every)==moe_offset
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+
+    # rg-lru (griffin / recurrentgemma)
+    rnn_width: int = 0
+    rnn_conv_width: int = 4
+
+    # misc
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    frontend: str | None = None        # None | "audio_frames" | "vision_patches"
+    frontend_tokens: int = 0           # tokens contributed by the stub frontend
+    dtype: Any = jnp.bfloat16          # parameter / KV-cache storage dtype
+    compute_dtype: Any = None          # matmul operand dtype (None = dtype);
+    # f8 storage + bf16 compute is the quantised-serving variant (the paper
+    # itself serves 4-bit SLMs at the edge — §Perf iteration log)
+    remat: bool = True
+    scan_layers: bool = True
+    attn_q_block: int = 512            # chunked-attention block sizes
+    attn_kv_block: int = 1024
+    moe_impl: str = "sort"             # sort | cumsum (see §Perf hillclimb)
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def comp_dtype(self):
+        return self.compute_dtype or self.dtype
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def layer_plan(self) -> tuple[tuple[str, str], ...]:
+        """Per-layer (mixer, ffn) kinds."""
+        plan = []
+        for i in range(self.num_layers):
+            mixer = self.mixer_pattern[i % len(self.mixer_pattern)]
+            if mixer == "ssd":
+                ffn = "none"
+            elif self.num_experts > 0 and i >= self.first_k_dense and (
+                    i % self.moe_every == self.moe_offset):
+                ffn = "moe"
+            else:
+                ffn = "mlp"
+            plan.append((mixer, ffn))
+        return tuple(plan)
+
+    def stage_plan(self) -> tuple["Stage", ...]:
+        """Group the layer plan into scannable stages.
+
+        Returns stages of (block_kinds, repeat): a stage with repeat>1 is
+        executed as a lax.scan over stacked params.  We look for a short
+        periodic structure after an optional non-periodic prefix (e.g.
+        deepseek's first dense layer, recurrentgemma's trailing partial
+        pattern group).
+        """
+        plan = list(self.layer_plan())
+        if not self.scan_layers:
+            return (Stage(tuple(plan), 1),)      # fully unrolled (slice mode)
+        stages: list[Stage] = []
+        for prefix in range(0, min(4, len(plan)) + 1):
+            body = plan[prefix:]
+            if not body:
+                continue
+            for period in range(1, 5):
+                if len(body) % period:
+                    # allow a trailing remainder stage
+                    rem = len(body) % period
+                    main, tail = body[:-rem], body[-rem:]
+                else:
+                    main, tail = body, []
+                if not main:
+                    continue
+                pat = main[:period]
+                if all(main[i] == pat[i % period] for i in range(len(main))):
+                    if prefix:
+                        stages.append(Stage(tuple(plan[:prefix]), 1))
+                    stages.append(Stage(tuple(pat), len(main) // period))
+                    if tail:
+                        stages.append(Stage(tuple(tail), 1))
+                    return tuple(stages)
+        return (Stage(tuple(plan), 1),)  # fallback: fully unrolled
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS = 6ND)."""
+        from repro.models import transformer  # local import to avoid cycle
+        tree = transformer.abstract_params(self)
+        return int(sum(math.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+    def active_params(self) -> int:
+        """Active (per-token) params for MoE: replace routed experts by top_k."""
+        n = self.num_params()
+        if self.num_experts and self.top_k:
+            expert = 3 * self.d_model * self.expert_d_ff
+            n_moe_layers = sum(1 for _, f in self.layer_plan() if f == "moe")
+            n -= n_moe_layers * (self.num_experts - self.top_k) * expert
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    blocks: tuple[tuple[str, str], ...]   # ((mixer, ffn), ...)
+    repeat: int
+
+
+# ---------------------------------------------------------------------------
+# ParamDef machinery
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    init: Callable[[jax.Array, tuple[int, ...], Any], Array] | None = None
+    dtype: Any = None                     # default: cfg dtype
+
+    def with_leading(self, n: int, axis_name: str = "layers") -> "ParamDef":
+        return ParamDef((n,) + self.shape, (axis_name,) + self.axes,
+                        self.init, self.dtype)
+
+
+def normal_init(std: float = 0.02):
+    def f(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    return f
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs: Any, key: jax.Array, dtype: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, d in zip(keys, leaves):
+        init = d.init or normal_init()
+        vals.append(init(k, d.shape, d.dtype or dtype))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(defs: Any, dtype: Any) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype),
+        defs, is_leaf=_is_def)
+
+
+def axes_tree(defs: Any) -> Any:
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def norm_def(d: int) -> ParamDef:
+    # zero-centred scale (gemma convention: weight = 1 + scale)
+    return ParamDef((d,), ("norm",), zeros_init)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """positions (..., S) -> cos/sin (..., S, head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, D); cos/sin (..., S, 1, D/2) broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "swiglu": jax.nn.silu,
+    "geglu": gelu,
+    "gelu": gelu,
+}

@@ -1,0 +1,41 @@
+"""Dense (gated) MLP block."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, norm_def,
+                                 normal_init, rmsnorm)
+
+Array = jax.Array
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    defs = {
+        "norm": norm_def(D),
+        "w_up": ParamDef((D, F), ("embed", "ffn"), normal_init()),
+        "w_down": ParamDef((F, D), ("ffn", "embed"), normal_init(std_o)),
+    }
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        defs["w_gate"] = ParamDef((D, F), ("embed", "ffn"), normal_init())
+    return defs
+
+
+def mlp_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    y = _mlp_body(p, h, cfg)
+    return x + y
+
+
+def _mlp_body(p: dict, h: Array, cfg: ModelConfig) -> Array:
+    act = ACTIVATIONS[cfg.ffn_act]
+    up = h @ p["w_up"].astype(h.dtype)
+    if "w_gate" in p:
+        up = act(h @ p["w_gate"].astype(h.dtype)) * up
+    else:
+        up = act(up)
+    return up @ p["w_down"].astype(h.dtype)

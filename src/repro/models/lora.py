@@ -1,0 +1,86 @@
+"""LoRA adapters (QLoRA-style efficient fine-tuning, paper Sec. II/IV-H).
+
+Adapters target the attention q/v projections and the MLP up-projection.
+``merge`` produces effective params W' = W + scale · A·B with the base
+frozen (stop_gradient), so a loss differentiated w.r.t. the adapter tree
+trains only the adapters — the paper's "teacher for distillation" pathway
+onto edge SLMs.  Works transparently on scan-stacked (leading layer dim)
+weights.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, init_tree, normal_init, zeros_init
+
+Array = jax.Array
+
+# key -> number of trailing dims that form the weight (in, out...) block
+_TARGETS = {"wq": 3, "wv": 3, "w_up": 2}
+
+
+def lora_defs(params: dict, rank: int = 8) -> dict:
+    """Adapter defs parallel to (a subset of) a concrete params tree."""
+    def walk(tree):
+        out = {}
+        if isinstance(tree, (list, tuple)):
+            tree = {str(i): v for i, v in enumerate(tree)}
+        for k, v in tree.items():
+            if isinstance(v, (dict, list, tuple)) and not hasattr(v, "shape"):
+                sub = walk(v)
+                if sub:
+                    out[k] = sub
+            elif k in _TARGETS and hasattr(v, "shape"):
+                base_nd = _TARGETS[k]
+                if v.ndim < base_nd:
+                    continue
+                lead = v.shape[:v.ndim - base_nd]
+                win = v.shape[v.ndim - base_nd]
+                wout = v.shape[v.ndim - base_nd + 1:]
+                lax = ("layers",) * len(lead)
+                out[k] = {
+                    "a": ParamDef(lead + (win, rank),
+                                  lax + ("embed", None), normal_init(0.02)),
+                    "b": ParamDef(lead + (rank,) + wout,
+                                  lax + (None,) + ("ffn",) * len(wout),
+                                  zeros_init),
+                }
+        return out
+    return walk(params)
+
+
+def init_lora(params: dict, key: jax.Array, rank: int = 8,
+              dtype=jnp.float32) -> dict:
+    return init_tree(lora_defs(params, rank), key, dtype)
+
+
+def _delta(a: Array, b: Array, base_nd: int) -> Array:
+    if base_nd == 2:
+        return jnp.einsum("...ir,...ro->...io", a, b)
+    return jnp.einsum("...ir,...rho->...iho", a, b)
+
+
+def merge(params: dict, lora: dict, scale: float = 1.0,
+          freeze_base: bool = True) -> dict:
+    """Effective params: W + scale·A·B on adapted leaves."""
+    def walk(ptree, ltree):
+        if isinstance(ptree, (list, tuple)):
+            return type(ptree)(
+                walk(v, ltree.get(str(i), {}) if isinstance(ltree, dict)
+                     else {}) for i, v in enumerate(ptree))
+        out = {}
+        for k, v in ptree.items():
+            lsub = ltree.get(k) if isinstance(ltree, dict) else None
+            if isinstance(v, (dict, list, tuple)) and not hasattr(v, "shape"):
+                out[k] = walk(v, lsub or {})
+            else:
+                base = jax.lax.stop_gradient(v) if freeze_base else v
+                if lsub is not None:
+                    d = _delta(lsub["a"], lsub["b"], _TARGETS[k])
+                    base = (base.astype(jnp.float32)
+                            + scale * d.astype(jnp.float32)).astype(v.dtype)
+                out[k] = base
+        return out
+    return walk(params, lora)

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN: capacity-based dispatch, EP-shardable.
+
+Dispatch layout is *grouped*: tokens are reshaped into ``moe_groups`` groups
+(one per data-parallel shard at the production mesh), each group dispatches
+into its own (E, C_local) capacity buffer.  Scatter/gather indices then stay
+aligned with the batch sharding, so SPMD keeps dispatch local to a (data,
+model) shard pair — the only collectives are the ones real expert parallelism
+needs (routed activations crossing the expert axis).
+
+Supports DeepSeek-style shared experts (always-on dense branch) and top-k
+renormalised softmax gating (top-1 == Switch, top-6 == DeepSeekMoE,
+top-1+shared == Llama-4-Scout).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, norm_def,
+                                 normal_init, rmsnorm)
+from repro.models.ffn import _mlp_body, mlp_defs
+
+Array = jax.Array
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    D, E, Fe = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    defs = {
+        "norm": norm_def(D),
+        "router": ParamDef((D, E), ("embed", "experts"), normal_init()),
+        "w_gate": ParamDef((E, D, Fe), ("experts", "embed", "expert_ffn"), normal_init()),
+        "w_up": ParamDef((E, D, Fe), ("experts", "embed", "expert_ffn"), normal_init()),
+        "w_down": ParamDef((E, Fe, D), ("experts", "expert_ffn", "embed"), normal_init(std_o)),
+    }
+    if cfg.num_shared_experts:
+        shared = dict(mlp_defs(cfg, d_ff=cfg.num_shared_experts * cfg.expert_d_ff))
+        shared.pop("norm")  # share the block norm
+        defs["shared"] = shared
+    return defs
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(tokens_per_group * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(_round_up(c, 8), 8)
+
+
+def moe_block(p: dict, x: Array, cfg: ModelConfig, *,
+              groups: int = 1, mesh=None, rules=None) -> tuple[Array, Array]:
+    """x (B,S,D) -> (x + moe(x), aux_loss).  groups must divide B*S.
+
+    Sharding note: the capacity buffer is kept REPLICATED over the model
+    axis (constrained below) so the dispatch scatter and combine gather stay
+    local to each (data, model) shard — if the buffer's E dim is
+    model-sharded, XLA SPMD rewrites the 3-index scatter into dense
+    select-updates with (A, D)-sized u32 index tensors (measured 58 GB of
+    u32 on deepseek train_4k; §Perf iteration 3).  The expert einsums then
+    contract against model-sharded weights and their outputs are constrained
+    back to replicated — one (g,E,C,D)-sized all-gather per layer instead.
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    assert T % groups == 0, (T, groups)
+    Tg = T // groups
+    C = moe_capacity(cfg, Tg)
+
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    hf = h.reshape(groups, Tg, D)
+
+    # --- routing (f32) ---
+    logits = jnp.einsum("gtd,de->gte", hf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (g,Tg,E)
+    gates, idx = jax.lax.top_k(probs, k)                       # (g,Tg,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e)
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32)
+    aux = E * jnp.mean(jnp.mean(onehot_top1, axis=1) * jnp.mean(probs, axis=1))
+
+    # --- dispatch: position of each assignment within its expert ---
+    flat_e = idx.reshape(groups, Tg * k)                       # (g, A)
+    A = Tg * k
+    if cfg.moe_impl == "cumsum":
+        # GShard-style one-hot cumsum: materialises (g, A, E) int32 —
+        # measured 100+ GB/device at deepseek train_4k; kept for the
+        # hillclimb before/after (EXPERIMENTS.md §Perf iteration 1)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)        # (g, A, E)
+        pos = jnp.cumsum(oh, axis=1) - oh
+        pos = jnp.take_along_axis(
+            pos, flat_e[..., None], axis=-1)[..., 0]           # (g, A)
+    else:
+        # sort-based ranking: O(A log A) and O(A) memory. argsort is
+        # stable, so in-segment order == token order == cumsum semantics.
+        # Segment starts come from a cummax over boundary markers (a vmapped
+        # searchsorted segfaulted XLA:CPU under 512-way SPMD — see §Perf).
+        sort_idx = jnp.argsort(flat_e, axis=1)                 # (g, A)
+        sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=1)
+        ar = jnp.arange(A)[None, :]
+        is_new = jnp.concatenate(
+            [jnp.ones((groups, 1), bool),
+             sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+        seg_start = jax.lax.cummax(jnp.where(is_new, ar, 0), axis=1)
+        pos_sorted = ar - seg_start
+        inv = jnp.argsort(sort_idx, axis=1)
+        pos = jnp.take_along_axis(pos_sorted, inv, axis=1)     # (g, A)
+    keep = pos < C
+    # dropped assignments scatter to row C (then sliced off)
+    e_idx = jnp.where(keep, flat_e, E - 1)
+    c_idx = jnp.where(keep, pos, C)
+
+    token_src = jnp.repeat(jnp.arange(Tg), k)                  # (A,)
+    src = jnp.take(hf, token_src, axis=1).astype(h.dtype)      # (g, A, D)
+
+    def _dispatch(src_l, e_l, c_l):
+        gl = jnp.broadcast_to(jnp.arange(src_l.shape[0])[:, None], e_l.shape)
+        b = jnp.zeros((src_l.shape[0], E, C + 1, D), src_l.dtype)
+        return b.at[gl, e_l, c_l].set(src_l, mode="drop")[:, :, :C]
+
+    def _combine(ob_l, e_l, c_l):
+        gl = jnp.broadcast_to(jnp.arange(ob_l.shape[0])[:, None], e_l.shape)
+        return ob_l[gl, e_l, jnp.minimum(c_l, C - 1)]
+
+    # Dispatch/combine run under shard_map when the group dim divides the
+    # batch axes: each (data, model) shard then executes a purely LOCAL
+    # scatter/gather with (A,)-sized indices.  Left to SPMD propagation, the
+    # 3-index scatter on an expert-sharded buffer gets rewritten into dense
+    # select-updates with (A, D)-sized u32 index maps (measured 58 GB of u32
+    # temps on deepseek train_4k; §Perf iterations 1-3).
+    daxes = tuple(a for a in ("pod", "data") if mesh is not None
+                  and a in mesh.shape)
+    dp = 1
+    for a in daxes:
+        dp *= mesh.shape[a]
+    use_smap = mesh is not None and daxes and groups % dp == 0
+    if use_smap:
+        from jax.sharding import PartitionSpec as P
+        gspec = P(daxes if len(daxes) > 1 else daxes[0])
+        smap = lambda f: jax.shard_map(f, mesh=mesh,
+                                       in_specs=(gspec, gspec, gspec),
+                                       out_specs=gspec)
+        buf = smap(_dispatch)(src, e_idx, c_idx)
+    else:
+        buf = _dispatch(src, e_idx, c_idx)
+
+    # --- expert compute (weights model-sharded over E) ---
+    act = ACTIVATIONS[cfg.ffn_act]
+    dt = h.dtype
+    gate_h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+    up_h = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    out_buf = jnp.einsum("gecf,efd->gecd", act(gate_h) * up_h,
+                         p["w_down"].astype(dt))               # (g,E,C,D)
+    out_buf = constrain(out_buf, ("act_batch", None, None, None), mesh, rules)
+
+    # --- combine ---
+    if use_smap:
+        y = smap(_combine)(out_buf, e_idx, c_idx)              # (g,A,D)
+    else:
+        y = _combine(out_buf, e_idx, c_idx)
+    w = (gates.reshape(groups, Tg * k) * keep).astype(jnp.float32)
+    y = (y.astype(jnp.float32) * w[..., None]).reshape(groups, Tg, k, D).sum(2)
+
+    if "shared" in p:
+        y = y + _mlp_body(p["shared"], hf, cfg).astype(jnp.float32)
+
+    return x + y.reshape(B, S, D).astype(x.dtype), aux

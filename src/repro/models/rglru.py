@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Full-sequence path uses ``lax.associative_scan`` over the gated linear
+recurrence h_t = a_t * h_{t-1} + b_t; decode is a single fused step on a
+(B, W) f32 state.  Combined with local attention (1 attn : 2 recurrent), the
+KV footprint is bounded by the window — which is what makes recurrentgemma a
+long_500k-capable swarm member.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, ParamDef, gelu, norm_def,
+                                 normal_init, rmsnorm, zeros_init)
+from repro.models.ssm import _causal_conv
+
+Array = jax.Array
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+class RGLRUState(NamedTuple):
+    h: Array      # (B, W) f32
+    conv: Array   # (B, conv_width-1, W)
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    D, W = cfg.d_model, cfg.rnn_width or cfg.d_model
+
+    def lam_init(key, shape, dtype):
+        # a = sigmoid(lam)^c uniform-ish in [0.9, 0.999]
+        u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        a_pow = u ** (1.0 / _C)
+        return jnp.log(a_pow / (1 - a_pow)).astype(dtype)
+
+    std_o = 0.02 / (2 * cfg.num_layers) ** 0.5
+    return {
+        "norm": norm_def(D),
+        "w_in": ParamDef((D, W), ("embed", "ssm_inner"), normal_init()),
+        "w_branch": ParamDef((D, W), ("embed", "ssm_inner"), normal_init()),
+        "conv_w": ParamDef((cfg.rnn_conv_width, W), ("conv_width", "ssm_inner"), normal_init()),
+        "conv_b": ParamDef((W,), ("ssm_inner",), zeros_init),
+        "wa": ParamDef((W, W), ("embed", "ssm_inner"), normal_init()),
+        "ba": ParamDef((W,), ("ssm_inner",), zeros_init),
+        "wx": ParamDef((W, W), ("embed", "ssm_inner"), normal_init()),
+        "bx": ParamDef((W,), ("ssm_inner",), zeros_init),
+        "lam": ParamDef((W,), ("ssm_inner",), lam_init, jnp.float32),
+        "w_out": ParamDef((W, D), ("ssm_inner", "embed"), normal_init(std_o)),
+    }
+
+
+def _gates(p: dict, u: Array):
+    """u (B,L,W) post-conv -> (log_a, b) of the recurrence, f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["wx"].astype(jnp.float32) + p["bx"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    """Full-sequence Griffin recurrent block. x (B,S,D)."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    u = h @ p["w_in"].astype(h.dtype)
+    g = gelu(h @ p["w_branch"].astype(h.dtype))
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq.astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
+    return x + y
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    W = cfg.rnn_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, W), jnp.float32),
+        conv=jnp.zeros((batch, cfg.rnn_conv_width - 1, W), cfg.dtype),
+    )
+
+
+def rglru_decode(p: dict, x: Array, state: RGLRUState, cfg: ModelConfig
+                 ) -> tuple[Array, RGLRUState]:
+    """One-token decode. x (B,1,D)."""
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    u = h @ p["w_in"].astype(h.dtype)
+    g = gelu(h @ p["w_branch"].astype(h.dtype))
+    u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"], prev=state.conv)
+    a, b = _gates(p, u)                      # (B,1,W)
+    h_new = a[:, 0] * state.h + b[:, 0]
+    y = (h_new[:, None].astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
+    return x + y, RGLRUState(h=h_new, conv=conv_tail)

@@ -1,0 +1,89 @@
+"""Inference engine: cached autoregressive generation + integrated probe.
+
+The uncertainty probe (paper Sec. IV-B) is computed *inside* the serving
+loop from the logits the engine already produces — on TPU via the fused
+``swarm_uncertainty`` kernel — so difficulty estimation adds no extra
+forward pass: the paper's probe SLM "is" the local SLM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.uncertainty import UncertaintyConfig, difficulty
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("cfg", "greedy"))
+def _step(params, cfg: ModelConfig, tokens, cache, index, rng, greedy: bool):
+    logits, cache = T.decode_step(params, cfg, tokens, cache, index)
+    lg = logits[:, -1].astype(jnp.float32)
+    if greedy:
+        nxt = jnp.argmax(lg, axis=-1)
+    else:
+        nxt = jax.random.categorical(rng, lg, axis=-1)
+    return nxt.astype(jnp.int32), lg, cache
+
+
+@dataclasses.dataclass
+class InferenceEngine:
+    """One swarm member: a model + its decode state machinery."""
+    name: str
+    cfg: ModelConfig
+    params: Any
+    ucfg: UncertaintyConfig = dataclasses.field(default_factory=UncertaintyConfig)
+    max_len: int = 128
+
+    def generate(self, prompts: np.ndarray, max_new: int, *,
+                 greedy: bool = True, seed: int = 0) -> dict:
+        """prompts (B, S) int32, LEFT-padded with PAD=0 (HF batched-decode
+        convention, so the last absorbed position is always the prompt end).
+        The prompt is absorbed teacher-forced through the cached decode
+        path; generated-token logits feed the Eq. 2-4 difficulty score.
+        """
+        prompts = np.asarray(prompts, np.int32)
+        B, S = prompts.shape
+        cache = T.init_cache(self.cfg, B, self.max_len)
+        cache = jax.tree.map(jnp.asarray, cache)
+        rng = jax.random.PRNGKey(seed)
+
+        lengths = (prompts != 0).sum(axis=1)      # PAD=0
+        nxt = None
+        # teacher-forced prompt absorption (static positions; PAD slots are
+        # overwritten later by real tokens for shorter prompts)
+        for t in range(S):
+            tok = jnp.asarray(prompts[:, t:t + 1])
+            nxt, last_logits, cache = _step(
+                self.params, self.cfg, tok, cache,
+                jnp.full((B,), t, jnp.int32), rng, True)
+
+        out_tokens = []
+        out_logits = []
+        cur = nxt
+        for n in range(max_new):
+            out_tokens.append(cur)
+            out_logits.append(last_logits)
+            rng, sub = jax.random.split(rng)
+            cur, last_logits, cache = _step(
+                self.params, self.cfg, cur[:, None], cache,
+                jnp.full((B,), S + n, jnp.int32), sub, greedy)
+
+        tokens = jnp.stack(out_tokens, axis=1)              # (B, N)
+        logits = jnp.stack(out_logits, axis=1)              # (B, N, V)
+        u = difficulty(logits, tokens, self.ucfg)           # (B,)
+        return {"tokens": np.asarray(tokens),
+                "u": np.asarray(u),
+                "logits": logits,
+                "prompt_lengths": np.asarray(lengths)}
+
+    def token_count(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        return (np.asarray(prompts) != 0).sum(axis=1) + max_new

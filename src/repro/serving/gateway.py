@@ -1,0 +1,221 @@
+"""The SWARM-LLM gateway: Algorithm 1 end-to-end over query batches.
+
+Wires together every core component — safety gate (Eq. 5-6), probe
+uncertainty (Eq. 2-4), threshold routing + hard budget (Sec. IV-F, Eq. 13),
+swarm collaboration + weighted consensus (Eq. 14), cloud escalation with
+the O5 degradation chain, privacy logging (Eq. 15-17) and the distillation
+buffer (Sec. IV-H).  Model execution is real; link timings come from the
+simulator (see serving/simulator.py docstring).
+
+The probe SLM *is* the local SLM (paper Sec. IV-A): its generation doubles
+as the local answer, so Level-0 queries cost exactly one SLM pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import budget as budget_lib
+from repro.core import cost_model as cm
+from repro.core import router as router_lib
+from repro.core.distill import DistillBuffer
+from repro.core.privacy import privacy_metrics
+from repro.core.router import (CLOUD, CLOUD_SAFETY, LOCAL, REFUSE, SWARM,
+                               RouterConfig)
+from repro.core.safety import safety_score
+from repro.data.workload import REFUSAL, is_correct
+from repro.serving.engine import InferenceEngine
+from repro.serving.simulator import NetworkSimulator
+from repro.serving.swarm import SwarmExecutor, pad_prompts
+
+
+@dataclasses.dataclass
+class GatewayLog:
+    decision: np.ndarray        # (Q,) router codes
+    u: np.ndarray               # (Q,) difficulty
+    safety: np.ndarray          # (Q,) safety score s
+    latency: np.ndarray         # (Q,) end-to-end seconds
+    cost: np.ndarray            # (Q,) dollars
+    prompt_len: np.ndarray      # (Q,) prompt length (chars proxy = tokens)
+    category: list              # (Q,) easy|hard|safety
+    correct: np.ndarray         # (Q,) bool (False where no gold)
+    answers: np.ndarray         # (Q, N) final answer tokens
+    consensus: np.ndarray       # (Q,) best cluster score (NaN if no swarm)
+
+    def cloud_usage(self) -> float:
+        return float(np.mean((self.decision == CLOUD)
+                             | (self.decision == CLOUD_SAFETY)))
+
+    def accuracy(self, category: str | None = None) -> float:
+        sel = np.array([c != "safety" and (category is None or c == category)
+                        for c in self.category])
+        return float(self.correct[sel].mean()) if sel.any() else float("nan")
+
+    def privacy(self):
+        is_saf = np.array([c == "safety" for c in self.category])
+        return privacy_metrics(jnp.asarray(self.decision),
+                               jnp.asarray(self.prompt_len),
+                               jnp.asarray(is_saf))
+
+
+@dataclasses.dataclass
+class Gateway:
+    probe: InferenceEngine                  # local SLM / probe (Tier 1)
+    swarm: SwarmExecutor                    # peers (includes probe or not)
+    cloud: InferenceEngine | None           # Foundation Nexus (Tier 2)
+    safety_params: Any
+    safety_cfg: Any
+    router_cfg: RouterConfig
+    sim: NetworkSimulator
+    cost_params: cm.CostParams = dataclasses.field(default_factory=cm.CostParams)
+    lat_params: cm.LatencyParams = dataclasses.field(default_factory=cm.LatencyParams)
+    budget_total: float = 1.0
+    max_new: int = 8
+    quorum: int | None = None               # beyond-paper straggler mitigation
+    distill_buffer: DistillBuffer = dataclasses.field(default_factory=DistillBuffer)
+
+    def __post_init__(self):
+        self.budget = budget_lib.init_budget(self.budget_total)
+
+    # ------------------------------------------------------------------
+    def answer_batch(self, queries: list[dict], seed: int = 0) -> GatewayLog:
+        B = len(queries)
+        prompts = pad_prompts([q["prompt"] for q in queries])
+        plen = (prompts != 0).sum(axis=1)
+        self.sim.tick()
+        wan_ok = bool(self.sim.wan_up)
+
+        # --- safety gate (Eq. 5); right-aligned to match classifier training
+        rp = pad_prompts([q["prompt"] for q in queries], align="right")
+        s = np.asarray(safety_score(self.safety_params, self.safety_cfg,
+                                    jnp.asarray(rp)))
+
+        # --- probe = local answer + difficulty (Eq. 2-4) ---
+        probe_res = self.probe.generate(prompts, self.max_new, seed=seed)
+        u = probe_res["u"]
+        probe_lat = self.sim.edge_latency(plen + self.max_new)
+
+        # --- phase A routing (Alg. 1 l.1-12, budget Eq. 13) ---
+        est_cost = np.asarray(cm.cost_cloud(
+            jnp.asarray(plen, jnp.float32), float(self.max_new),
+            self.cost_params))
+        l_cloud_est = self.lat_params.wan_rtt_mean \
+            + self.lat_params.cloud_per_token * (plen + self.max_new)
+        phase_a = router_lib.route(
+            jnp.asarray(u), jnp.asarray(s), cfg=self.router_cfg,
+            budget=self.budget, wan_ok=wan_ok,
+            est_cloud_cost=jnp.asarray(est_cost),
+            l_edge=jnp.asarray(probe_lat),
+            l_cloud=jnp.asarray(l_cloud_est))
+        decision = np.asarray(phase_a.decision)
+        self.budget = phase_a.budget
+
+        # --- swarm round for Level-1 queries (Alg. 1 l.13-14) ---
+        latency = probe_lat.copy()
+        cost = np.zeros((B,))
+        answers = probe_res["tokens"].copy()
+        consensus = np.full((B,), np.nan)
+        swarm_mask = decision == SWARM
+        if swarm_mask.any():
+            sw = self.swarm.collaborate(prompts[swarm_mask], self.max_new,
+                                        member_mask=self.sim.member_up,
+                                        seed=seed)
+            consensus[swarm_mask] = sw["consensus_score"]
+            n_members = len(self.swarm.members)
+            edge_l = self.sim.edge_latency(
+                np.tile((plen[swarm_mask] + self.max_new)[:, None],
+                        (1, n_members)))
+            comm_l = self.sim.peer_comm(int(swarm_mask.sum()), n_members)
+            sw_lat = np.asarray(cm.latency_swarm(
+                jnp.asarray(edge_l), jnp.asarray(comm_l), self.lat_params,
+                quorum=self.quorum))
+            latency[swarm_mask] += sw_lat
+            b = cm.swarm_bytes(plen[swarm_mask].astype(float),
+                               float(self.max_new * n_members),
+                               self.cost_params)
+            cost[swarm_mask] += np.asarray(cm.cost_swarm(
+                (plen[swarm_mask] + self.max_new).astype(float) * n_members,
+                b, self.cost_params))
+            answers[swarm_mask] = sw["winner_tokens"]
+
+        # --- phase B: consensus gate -> escalate (Alg. 1 l.15-23) ---
+        cons_arr = np.where(np.isnan(consensus), 1.0, consensus)
+        phase_b = router_lib.post_consensus(
+            jnp.asarray(decision), jnp.asarray(cons_arr, np.float32),
+            cfg=self.router_cfg, budget=self.budget, wan_ok=wan_ok,
+            est_cloud_cost=jnp.asarray(est_cost))
+        decision = np.asarray(phase_b.decision)
+        self.budget = phase_b.budget
+
+        # --- cloud execution (Tier 2) ---
+        cloud_mask = (decision == CLOUD) | (decision == CLOUD_SAFETY)
+        if cloud_mask.any() and self.cloud is not None:
+            cl = self.cloud.generate(prompts[cloud_mask], self.max_new,
+                                     seed=seed)
+            answers[cloud_mask] = cl["tokens"]
+            latency[cloud_mask] += self.sim.cloud_latency(
+                plen[cloud_mask] + self.max_new)
+            cost[cloud_mask] += est_cost[cloud_mask]
+            # distillation feedback loop (Sec. IV-H)
+            for qi in np.where(cloud_mask)[0]:
+                self.distill_buffer.log(queries[qi]["prompt"],
+                                        answers[qi].tolist(),
+                                        meta={"u": float(u[qi])})
+
+        # --- refusals ---
+        refuse_mask = decision == REFUSE
+        answers[refuse_mask] = REFUSAL
+
+        correct = np.array([is_correct(answers[i], queries[i].get("gold"))
+                            for i in range(B)])
+        return GatewayLog(
+            decision=decision, u=u, safety=s, latency=latency, cost=cost,
+            prompt_len=plen,
+            category=[q.get("category", "easy") for q in queries],
+            correct=correct, answers=answers, consensus=consensus)
+
+
+# ---------------------------------------------------------------------------
+# Baseline architectures (Sec. VI-B)
+# ---------------------------------------------------------------------------
+
+def run_edge_only(queries, engine: InferenceEngine, sim: NetworkSimulator,
+                  max_new: int = 8, seed: int = 0) -> GatewayLog:
+    prompts = pad_prompts([q["prompt"] for q in queries])
+    plen = (prompts != 0).sum(axis=1)
+    res = engine.generate(prompts, max_new, seed=seed)
+    lat = sim.edge_latency(plen + max_new)
+    correct = np.array([is_correct(res["tokens"][i], q.get("gold"))
+                        for i, q in enumerate(queries)])
+    B = len(queries)
+    return GatewayLog(
+        decision=np.full((B,), LOCAL), u=res["u"],
+        safety=np.zeros((B,)), latency=lat, cost=np.zeros((B,)),
+        prompt_len=plen, category=[q.get("category", "easy") for q in queries],
+        correct=correct, answers=res["tokens"],
+        consensus=np.full((B,), np.nan))
+
+
+def run_cloud_only(queries, cloud: InferenceEngine, sim: NetworkSimulator,
+                   cost_params: cm.CostParams | None = None,
+                   max_new: int = 8, seed: int = 0) -> GatewayLog:
+    cost_params = cost_params or cm.CostParams()
+    prompts = pad_prompts([q["prompt"] for q in queries])
+    plen = (prompts != 0).sum(axis=1)
+    res = cloud.generate(prompts, max_new, seed=seed)
+    lat = sim.cloud_latency(plen + max_new)
+    cost = np.asarray(cm.cost_cloud(jnp.asarray(plen, jnp.float32),
+                                    float(max_new), cost_params))
+    correct = np.array([is_correct(res["tokens"][i], q.get("gold"))
+                        for i, q in enumerate(queries)])
+    B = len(queries)
+    return GatewayLog(
+        decision=np.full((B,), CLOUD), u=res["u"],
+        safety=np.zeros((B,)), latency=lat, cost=cost,
+        prompt_len=plen, category=[q.get("category", "easy") for q in queries],
+        correct=correct, answers=res["tokens"],
+        consensus=np.full((B,), np.nan))

@@ -1,0 +1,85 @@
+"""Serving-side scheduling: peer selection, quorum, continuous batching.
+
+* ``select_peers``: deadline-aware peer choice (objective O1) — rank peers
+  by predicted L_edge + L_comm and take the k that fit L_max.
+* ``ContinuousBatcher``: fixed-slot decode batching — requests stream into
+  free slots, finished slots free immediately (vLLM-style iteration-level
+  scheduling, shaped for the batched TPU decode step whose batch dim is
+  static).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def select_peers(pred_latency: np.ndarray, k: int, l_max: float,
+                 available: np.ndarray | None = None) -> np.ndarray:
+    """pred_latency (n,) predicted per-peer response time -> bool mask of
+    up-to-k chosen peers whose prediction fits the deadline."""
+    n = len(pred_latency)
+    if available is None:
+        available = np.ones((n,), bool)
+    order = np.argsort(pred_latency)
+    chosen = np.zeros((n,), bool)
+    taken = 0
+    for j in order:
+        if taken >= k:
+            break
+        if available[j] and pred_latency[j] <= l_max:
+            chosen[j] = True
+            taken += 1
+    return chosen
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Iteration-level scheduler over a fixed number of decode slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def admit(self) -> list[int]:
+        """Fill free slots from the queue; returns newly admitted slot ids."""
+        admitted = []
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+                admitted.append(i)
+        return admitted
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None and not s.done for s in self.slots])
+
+    def record_tokens(self, tokens: np.ndarray, stop_token: int | None = None):
+        """tokens (n_slots,) newest token per slot; retire finished requests."""
+        for i, s in enumerate(self.slots):
+            if s is None or s.done:
+                continue
+            t = int(tokens[i])
+            s.generated.append(t)
+            if len(s.generated) >= s.max_new or (stop_token is not None
+                                                 and t == stop_token):
+                s.done = True
+                self.finished.append(s)
+                self.slots[i] = None
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)

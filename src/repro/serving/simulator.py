@@ -1,0 +1,78 @@
+"""Event-level network / failure simulator (paper Sec. III-B environment).
+
+The prototype measured wall-clock on one desktop; this container is CPU-only,
+so end-to-end latencies come from a calibrated stochastic model instead
+(constants in core/cost_model.LatencyParams, fitted to Table III):
+
+  * WAN: lognormal RTT + two-state Markov availability (outages, O5 tests)
+  * local links: per-peer Gaussian jitter (Eq. 9's L_comm)
+  * nodes: Bernoulli-per-window failures with exponential recovery
+    (straggler/fault injection for the quorum experiments)
+
+All routing/consensus/budget code that the simulator drives is the REAL
+production code — only link/compute *timings* are synthetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cost_model import LatencyParams
+
+
+@dataclasses.dataclass
+class SimConfig:
+    seed: int = 0
+    wan_outage_p: float = 0.02       # P(up -> down) per query
+    wan_recover_p: float = 0.5       # P(down -> up) per query
+    node_fail_p: float = 0.0         # per-query member failure probability
+    node_recover_p: float = 0.5
+    straggler_p: float = 0.05        # peer responds ~5x slower
+    straggler_mult: float = 5.0
+
+
+class NetworkSimulator:
+    def __init__(self, cfg: SimConfig, lat: LatencyParams, n_members: int):
+        self.cfg = cfg
+        self.lat = lat
+        self.rng = np.random.RandomState(cfg.seed)
+        self.wan_up = True
+        self.member_up = np.ones((n_members,), bool)
+
+    # --- state evolution (called once per query/batch tick) ---------------
+    def tick(self):
+        c = self.cfg
+        if self.wan_up:
+            self.wan_up = self.rng.rand() >= c.wan_outage_p
+        else:
+            self.wan_up = self.rng.rand() < c.wan_recover_p
+        for j in range(len(self.member_up)):
+            if self.member_up[j]:
+                self.member_up[j] = self.rng.rand() >= c.node_fail_p
+            else:
+                self.member_up[j] = self.rng.rand() < c.node_recover_p
+
+    # --- latency samples ----------------------------------------------------
+    def wan_rtt(self, n: int) -> np.ndarray:
+        mu, sd = self.lat.wan_rtt_mean, self.lat.wan_rtt_std
+        sigma2 = np.log(1 + (sd / mu) ** 2)
+        return self.rng.lognormal(np.log(mu) - sigma2 / 2, np.sqrt(sigma2), n)
+
+    def peer_comm(self, n_queries: int, n_members: int) -> np.ndarray:
+        base = np.abs(self.rng.normal(self.lat.comm_peer_mean,
+                                      self.lat.comm_peer_std,
+                                      (n_queries, n_members)))
+        straggle = self.rng.rand(n_queries, n_members) < self.cfg.straggler_p
+        return np.where(straggle, base * self.cfg.straggler_mult, base)
+
+    def edge_latency(self, token_counts: np.ndarray) -> np.ndarray:
+        sg = self.lat.edge_jitter_sigma
+        jitter = self.rng.lognormal(-sg * sg / 2, sg, np.shape(token_counts))
+        return (self.lat.edge_prefill
+                + self.lat.edge_per_token * token_counts) * jitter
+
+    def cloud_latency(self, token_counts: np.ndarray) -> np.ndarray:
+        return self.wan_rtt(len(np.atleast_1d(token_counts))) \
+            + self.lat.cloud_per_token * token_counts

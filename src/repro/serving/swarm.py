@@ -1,0 +1,94 @@
+"""Swarm executor: heterogeneous peer collaboration + weighted consensus.
+
+Runs up to k peer engines on the same query batch, clusters answers by
+exact token sequence, and applies the Eq. 14 uncertainty-weighted consensus
+(core/consensus.py).  Quorum mode (beyond-paper straggler mitigation) takes
+the fastest `quorum` members' answers — under the simulator this turns
+Eq. 9's max() into an order statistic and bounds swarm tail latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import PAD, batched_consensus
+from repro.serving.engine import InferenceEngine
+
+
+def pad_prompts(prompts: Sequence[Sequence[int]], length: int | None = None,
+                align: str = "left") -> np.ndarray:
+    """Pad variable-length prompts with PAD=0 into (B, S).
+
+    align="left" (left-pad, HF batched-decode convention) for generation;
+    align="right" (right-pad) for the safety classifier, matching its
+    training layout."""
+    length = length or max(len(p) for p in prompts)
+    out = np.zeros((len(prompts), length), np.int32)
+    for i, p in enumerate(prompts):
+        p = list(p)[-length:]
+        if align == "left":
+            out[i, length - len(p):] = p
+        else:
+            out[i, :len(p)] = p
+    return out
+
+
+def truncate_at_stop(tokens: np.ndarray, stop_token: int | None) -> np.ndarray:
+    """Answer normalisation (paper's lowercase/collapse analogue): keep
+    tokens up to and excluding the first stop token, PAD the rest — so
+    cross-model clustering compares *answers*, not trailing continuations."""
+    if stop_token is None:
+        return tokens
+    out = tokens.copy()
+    hit = np.cumsum(tokens == stop_token, axis=-1) > 0
+    out[hit] = PAD
+    return out
+
+
+@dataclasses.dataclass
+class SwarmExecutor:
+    members: list[InferenceEngine]
+    w_min: float = 0.05
+    stop_token: int | None = None
+
+    def collaborate(self, prompts: np.ndarray, max_new: int, *,
+                    member_mask: np.ndarray | None = None,
+                    seed: int = 0) -> dict:
+        """prompts (B, S). member_mask (n,) bool marks *available* members
+        (node-failure injection / quorum selection excludes the rest).
+
+        Returns per-query consensus winners + scores + per-member outputs.
+        """
+        n = len(self.members)
+        B = prompts.shape[0]
+        if member_mask is None:
+            member_mask = np.ones((n,), bool)
+
+        answers = np.full((B, n, max_new), PAD, np.int32)
+        u = np.ones((B, n), np.float32)            # unavailable => weight w_min
+        for j, eng in enumerate(self.members):
+            if not member_mask[j]:
+                continue
+            res = eng.generate(prompts, max_new, seed=seed + j)
+            answers[:, j, :] = truncate_at_stop(res["tokens"], self.stop_token)
+            u[:, j] = res["u"]
+
+        # unavailable members keep PAD answers; give them zero support by
+        # grouping them into a sentinel cluster with weight w_min (paper's
+        # floor) — exact-match keeps them away from real clusters.
+        res = batched_consensus(jnp.asarray(answers), jnp.asarray(u),
+                                w_min=self.w_min)
+        rep = np.asarray(res.rep_index)
+        winners = answers[np.arange(B), rep]
+        return {
+            "answers": answers,                       # (B, n, N)
+            "u": u,                                   # (B, n)
+            "winner_tokens": winners,                 # (B, N)
+            "winner_member": rep,                     # (B,)
+            "consensus_score": np.asarray(res.best_score),  # (B,)
+            "scores": np.asarray(res.scores),         # (B, n)
+        }

@@ -1,0 +1,173 @@
+"""Sharded, atomic, mesh-agnostic checkpointing (fault-tolerance substrate).
+
+Format: <dir>/step_<n>/
+    manifest.json    — tree structure, global shapes/dtypes, step, extra
+    shard_<i>.npz    — this process's addressable shards (leaf-path keyed)
+
+Writes go to <dir>/tmp_<n> then os.replace -> atomic publish; a LATEST file
+is updated last, so a crash mid-save can never corrupt the recoverable
+state.  Restore rebuilds global arrays from per-shard callbacks against the
+*current* mesh/shardings, so a checkpoint taken on a 2x16x16 mesh restores
+onto 16x16 (elastic re-mesh after node loss — DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{SEP}"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "shape"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}{SEP}"))
+    else:
+        out[prefix.rstrip(SEP)] = tree
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None,
+         keep: int = 3) -> str:
+    """Write one checkpoint atomically; prune old ones. Returns final path."""
+    flat = _flatten(tree)
+    treedef = jax.tree.structure(tree)
+    tmp = os.path.join(ckpt_dir, f"tmp_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "extra": extra or {},
+                "treedef": str(treedef),
+                "leaves": {}}
+    shard_payload = {}
+    for path, leaf in flat.items():
+        arr = leaf
+        manifest["leaves"][path] = {
+            "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if hasattr(arr, "addressable_shards"):
+            for sh in arr.addressable_shards:
+                key = f"{path}@{'_'.join(map(str, _index_key(sh.index, arr.shape)))}"
+                shard_payload[key] = _to_savable(np.asarray(sh.data))
+        else:
+            shard_payload[f"{path}@full"] = _to_savable(np.asarray(arr))
+    pid = jax.process_index()
+    np.savez(os.path.join(tmp, f"shard_{pid}.npz"), **shard_payload)
+    if pid == 0:
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic publish
+    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+        f.write(str(step))
+    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+               os.path.join(ckpt_dir, "LATEST"))
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't hold ml_dtypes (bfloat16 etc.) — store as a uint view; the
+    manifest records the logical dtype for restore."""
+    if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16) if arr.dtype.itemsize == 2 \
+            else arr.view(np.uint8)
+    return arr
+
+
+def _index_key(index, shape):
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else sl.start
+        stop = dim if sl.stop is None else sl.stop
+        out.extend([start, stop])
+    return out
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, step: int, abstract_tree: Any,
+            shardings: Any | None = None) -> tuple[Any, dict]:
+    """Rebuild the tree on the current mesh. abstract_tree gives structure."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    # load all shard files (single- or multi-host written)
+    payload: dict[str, np.ndarray] = {}
+    for fn in os.listdir(d):
+        if fn.startswith("shard_") and fn.endswith(".npz"):
+            with np.load(os.path.join(d, fn)) as z:
+                for k in z.files:
+                    payload[k] = z[k]
+
+    def assemble(path: str, spec) -> np.ndarray:
+        shape = tuple(manifest["leaves"][path]["shape"])
+        dtype = manifest["leaves"][path]["dtype"]
+        if dtype == "bfloat16":
+            import ml_dtypes
+            np_dtype = np.dtype(ml_dtypes.bfloat16)
+        else:
+            np_dtype = np.dtype(dtype)
+
+        def decode(a: np.ndarray) -> np.ndarray:
+            return a.view(np_dtype) if a.dtype != np_dtype else a
+
+        full = np.zeros(shape, np_dtype)
+        for key, arr in payload.items():
+            p, _, idx = key.rpartition("@")
+            if p != path:
+                continue
+            if idx in ("full", ""):      # "" = 0-d array shard
+                return decode(arr).reshape(shape)
+            nums = list(map(int, idx.split("_")))
+            sls = tuple(slice(nums[2 * i], nums[2 * i + 1])
+                        for i in range(len(nums) // 2))
+            full[sls] = decode(arr)
+        return full
+
+    flat_abs = _flatten(abstract_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    leaves_out = {}
+    for path, sds in flat_abs.items():
+        host = assemble(path, sds)
+        sh = flat_shard.get(path)
+        if sh is not None:
+            leaves_out[path] = jax.make_array_from_callback(
+                host.shape, sh, lambda idx, h=host: h[idx])
+        else:
+            leaves_out[path] = jax.numpy.asarray(host)
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}{k}{SEP}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)) and not hasattr(tree, "shape"):
+            vals = [rebuild(v, f"{prefix}{i}{SEP}") for i, v in enumerate(tree)]
+            return type(tree)(vals) if not hasattr(tree, "_fields") \
+                else type(tree)(*vals)
+        return leaves_out[prefix.rstrip(SEP)]
+
+    return rebuild(abstract_tree), manifest["extra"]

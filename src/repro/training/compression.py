@@ -1,0 +1,63 @@
+"""Gradient compression for the cross-pod (DCN/WAN-class) hop.
+
+Pods are the paper's "edge sites": intra-pod links are fast ICI, while the
+pod axis crosses slower links — exactly where SWARM-LLM's cost model charges
+c_comm per byte (Eq. 8).  We compress the cross-pod gradient all-reduce to
+int8 with per-tensor scale and *error feedback* (the quantisation residual
+is carried to the next step), which preserves convergence (Karimireddy et
+al., 2019) while cutting pod-link bytes 4x vs f32 / 2x vs bf16.
+
+``compressed_psum`` is used inside a ``shard_map`` over the 'pod' axis (see
+launch/train.py --grad-compression); quantise/dequantise are pure and unit-
+tested standalone.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantise_int8(x: Array) -> tuple[Array, Array]:
+    """f32/bf16 -> (int8, scale). Symmetric per-tensor."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantise_int8(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_with_feedback(g: Array, err: Array) -> tuple[Array, Array, Array]:
+    """Returns (int8 payload, scale, new error residual)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantise_int8(corrected)
+    deq = dequantise_int8(q, scale)
+    return q, scale, corrected - deq
+
+
+def compressed_psum(g: Array, err: Array, axis_name: str
+                    ) -> tuple[Array, Array]:
+    """int8 error-feedback all-reduce over `axis_name` (inside shard_map).
+
+    Each participant quantises its shard contribution; the sum of int8
+    payloads is exact in int32, then a single dequant by the max scale.
+    Returns (reduced grads f32, new error residual).
+    """
+    q, scale, new_err = compress_with_feedback(g, err)
+    total = jax.lax.psum(q.astype(jnp.int32) * 1, axis_name)
+    # conservative shared scale: max over participants keeps the sum bounded
+    scale_max = jax.lax.pmax(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = total.astype(jnp.float32) * scale_max / n
+    return mean, new_err
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

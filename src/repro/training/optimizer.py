@@ -1,0 +1,96 @@
+"""AdamW in pure JAX, ZeRO-style: optimizer state inherits param sharding.
+
+Master weights + first/second moments are f32 regardless of param dtype
+(bf16 params at 110B scale); update math runs in f32 and casts back.  The
+state tree is parallel to the param tree, so the same logical-axis sharding
+rules shard it (= ZeRO-1/2 when params are FSDP-sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: Array
+    master: Any   # f32 master weights
+    m: Any
+    v: Any
+
+
+def init(params: Any) -> OptState:
+    # copy=True: astype on an already-f32 param would alias it, and aliased
+    # buffers break donation (donated twice) in the train step
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    master=jax.tree.map(f32, params),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def abstract_state(abstract_params: Any) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    master=jax.tree.map(f32, abstract_params),
+                    m=jax.tree.map(f32, abstract_params),
+                    v=jax.tree.map(f32, abstract_params))
+
+
+def schedule(step: Array, cfg: AdamWConfig) -> Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def apply(grads: Any, params: Any, state: OptState, cfg: AdamWConfig
+          ) -> tuple[Any, OptState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, master, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                + cfg.weight_decay * master)
+        return master, m, v
+
+    out = jax.tree.map(upd, grads, state.master, state.m, state.v)
+    master = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master, params)
+    new_state = OptState(step=step, master=master, m=m, v=v)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

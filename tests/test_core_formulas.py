@@ -1,0 +1,167 @@
+"""Unit tests for the paper's equations (Sec. IV), against hand calculations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import budget as B
+from repro.core import consensus as CO
+from repro.core import cost_model as CM
+from repro.core import privacy as PV
+from repro.core import router as R
+from repro.core import uncertainty as U
+
+
+class TestUncertainty:
+    def test_token_nent_hand(self):
+        # two tokens, p(t) = [1, 0.5] -> -p log p = [0, 0.5*log2]
+        logits = jnp.array([[[100.0, 0.0, 0.0], [1.0, 1.0, -1e9]]])
+        toks = jnp.array([[0, 0]])
+        per = U.token_nent(logits, toks)
+        np.testing.assert_allclose(per[0, 0], 0.0, atol=1e-5)
+        np.testing.assert_allclose(per[0, 1], 0.5 * np.log(2), rtol=1e-5)
+
+    def test_eq2_mean_over_positions(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 16))
+        toks = jnp.zeros((2, 5), jnp.int32)
+        h = U.sequence_entropy(logits, toks)
+        np.testing.assert_allclose(h, U.token_nent(logits, toks).mean(-1),
+                                   rtol=1e-6)
+
+    def test_eq3_topk_variance_hand(self):
+        logits = jnp.array([[[4.0, 2.0, 0.0, -50.0]]])
+        v = U.topk_logit_variance(logits, k=3)  # var([4,2,0]) = 8/3
+        np.testing.assert_allclose(v[0, 0], 8.0 / 3, rtol=1e-6)
+
+    def test_eq4_mixture_bounds(self):
+        logits = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64)) * 5
+        toks = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, 64)
+        for alpha in (0.0, 0.5, 1.0):
+            u = U.difficulty(logits, toks, U.UncertaintyConfig(alpha=alpha))
+            assert u.shape == (4,)
+            assert (u >= 0).all() and (u <= 1.0 + 1e-6).all()
+
+    def test_flat_vs_confident_distribution_mode(self):
+        V = 64
+        conf = jnp.zeros((1, 4, V)).at[..., 3].set(25.0)
+        flat = jnp.zeros((1, 4, V))
+        toks = jnp.full((1, 4), 3, jnp.int32)
+        cfg = U.UncertaintyConfig(alpha=1.0, mode="distribution")
+        assert float(U.difficulty(flat, toks, cfg)[0]) > \
+            float(U.difficulty(conf, toks, cfg)[0])
+
+    def test_invert_variance_flag(self):
+        logits = jnp.zeros((1, 4, 64)).at[..., 0].set(30.0)
+        toks = jnp.zeros((1, 4), jnp.int32)
+        base = U.UncertaintyConfig(alpha=0.0)
+        inv = U.UncertaintyConfig(alpha=0.0, invert_variance=True)
+        u0 = float(U.difficulty(logits, toks, base)[0])
+        u1 = float(U.difficulty(logits, toks, inv)[0])
+        np.testing.assert_allclose(u0 + u1, 1.0, atol=1e-5)
+
+
+class TestConsensus:
+    def test_eq14_hand(self):
+        # nodes 0,1 agree; weights w = clip(1-U, 0.05, 1)
+        ans = jnp.array([[7, 8, -1], [7, 8, -1], [9, -1, -1]])
+        u = jnp.array([0.2, 0.4, 0.1])
+        res = CO.weighted_consensus(ans, u)
+        w = np.clip(1 - np.array([0.2, 0.4, 0.1]), 0.05, 1)
+        np.testing.assert_allclose(float(res.best_score),
+                                   (w[0] + w[1]) / w.sum(), rtol=1e-6)
+        assert int(res.rep_index) in (0, 1)
+
+    def test_w_min_floor(self):
+        ans = jnp.array([[1, -1], [2, -1]])
+        u = jnp.array([1.0, 0.0])  # node 0 fully uncertain
+        res = CO.weighted_consensus(ans, u)
+        np.testing.assert_allclose(float(res.weights[0]), 0.05)
+
+    def test_longest_representative(self):
+        ans = jnp.array([[5, 6, -1, -1], [5, 6, 7, 8], [5, 6, -1, -1]])
+        # make all one cluster? they're different sequences -> distinct
+        u = jnp.array([0.1, 0.95, 0.1])
+        res = CO.weighted_consensus(ans, u)
+        # cluster {0,2} wins; rep is one of them (equal lengths)
+        assert int(res.rep_index) in (0, 2)
+
+    def test_gamma_gate(self):
+        res = CO.weighted_consensus(jnp.array([[1], [2], [3]]),
+                                    jnp.array([0.5, 0.5, 0.5]))
+        assert int(CO.consensus_decision(res, gamma=0.6)) == 0
+        assert int(CO.consensus_decision(res, gamma=0.3)) == 1
+
+
+class TestRouterAlg1:
+    def _route(self, u, s, total=1.0, wan=True, cost=0.001):
+        n = len(u)
+        return R.route(jnp.array(u), jnp.array(s),
+                       cfg=R.RouterConfig.final(),
+                       budget=B.init_budget(total), wan_ok=wan,
+                       est_cloud_cost=jnp.full((n,), cost))
+
+    def test_levels(self):
+        r = self._route([0.01, 0.15, 0.9], [0.0, 0.0, 0.0])
+        assert r.decision.tolist() == [R.LOCAL, R.SWARM, R.CLOUD]
+
+    def test_risk_forces_cloud(self):
+        r = self._route([0.01], [0.99])
+        assert r.decision.tolist() == [R.CLOUD_SAFETY]
+
+    def test_risk_without_wan_refuses(self):
+        r = self._route([0.01], [0.99], wan=False)
+        assert r.decision.tolist() == [R.REFUSE]
+
+    def test_budget_exhaustion_falls_back_to_swarm(self):
+        r = self._route([0.9, 0.9], [0.0, 0.0], total=0.0015, cost=0.001)
+        assert r.decision.tolist() == [R.CLOUD, R.SWARM]
+
+    def test_post_consensus_escalation(self):
+        r = self._route([0.15, 0.15], [0.0, 0.0])
+        pc = R.post_consensus(r.decision, jnp.array([0.9, 0.1]),
+                              cfg=R.RouterConfig.final(), budget=r.budget,
+                              wan_ok=True,
+                              est_cloud_cost=jnp.full((2,), 0.001))
+        assert pc.decision.tolist() == [R.SWARM, R.CLOUD]
+        assert pc.use_swarm_answer.tolist() == [True, False]
+
+
+class TestBudgetEq13:
+    def test_sequential_semantics(self):
+        adm, st = B.charge_batch(B.init_budget(0.025),
+                                 jnp.full((4,), 0.01),
+                                 jnp.array([True, True, True, True]))
+        assert adm.tolist() == [True, True, False, False]
+        np.testing.assert_allclose(float(st.used), 0.02)
+
+    def test_window_roll(self):
+        st = B.init_budget(1.0)._replace(used=jnp.float32(0.9))
+        st2 = B.roll_window(st, jnp.int32(1))
+        assert float(st2.used) == 0.0
+
+
+class TestCostEq7to9:
+    def test_eq7(self):
+        p = CM.CostParams()
+        c = CM.cost_cloud(jnp.float32(100), jnp.float32(50), p)
+        np.testing.assert_allclose(float(c), 150 * 0.88e-6, rtol=1e-6)
+
+    def test_eq9_max_and_quorum(self):
+        p = CM.LatencyParams(agg_overhead=0.0)
+        edge = jnp.array([[1.0, 2.0, 5.0]])
+        comm = jnp.zeros((1, 3))
+        full = CM.latency_swarm(edge, comm, p)
+        q2 = CM.latency_swarm(edge, comm, p, quorum=2)
+        assert float(full[0]) == 5.0 and float(q2[0]) == 2.0
+
+
+class TestPrivacyEq15to17:
+    def test_hand_computed(self):
+        dec = jnp.array([R.LOCAL, R.CLOUD, R.SWARM, R.CLOUD_SAFETY])
+        plen = jnp.array([10, 30, 10, 50])
+        saf = jnp.array([False, False, False, True])
+        m = PV.privacy_metrics(dec, plen, saf)
+        np.testing.assert_allclose(float(m.cer), 0.5)
+        np.testing.assert_allclose(float(m.ter), 80 / 100)
+        np.testing.assert_allclose(float(m.ser), 1.0)

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.swarm_uncertainty.kernel import uncertainty_pallas
+from repro.kernels.swarm_uncertainty.ref import uncertainty_ref
+
+KEYS = jax.random.split(jax.random.PRNGKey(0), 8)
+
+
+class TestSwarmUncertainty:
+    @pytest.mark.parametrize("B,N,V,bn,bv,k", [
+        (2, 16, 4096, 8, 1024, 10),
+        (1, 8, 512, 8, 128, 5),
+        (3, 32, 8192, 8, 2048, 16),
+        (1, 8, 1024, 4, 256, 1),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, N, V, bn, bv, k, dtype):
+        logits = (jax.random.normal(KEYS[0], (B, N, V), jnp.float32) * 3
+                  ).astype(dtype)
+        toks = jax.random.randint(KEYS[1], (B, N), 0, V)
+        h, v, hd = uncertainty_pallas(logits, toks, k=k, bn=bn, bv=bv,
+                                      interpret=True)
+        hr, vr, hdr = uncertainty_ref(logits, toks, k=k)
+        tol = 1e-4 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(h, hr, rtol=tol, atol=tol)
+        np.testing.assert_allclose(v, vr, rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(hd, hdr, rtol=tol, atol=tol)
+
+    def test_extreme_logits_stable(self):
+        logits = jnp.full((1, 8, 512), -1e4).at[..., 0].set(1e4)
+        toks = jnp.zeros((1, 8), jnp.int32)
+        h, v, hd = uncertainty_pallas(logits, toks, k=4, bv=128,
+                                      interpret=True)
+        assert np.isfinite(np.asarray(h)).all()
+        assert np.isfinite(np.asarray(v)).all()
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,K,D,causal,window,bq,bk", [
+        (2, 256, 4, 2, 64, True, None, 64, 64),
+        (1, 128, 8, 8, 32, False, None, 64, 32),
+        (2, 256, 6, 2, 64, True, 64, 64, 64),      # sliding window
+        (1, 512, 4, 1, 128, True, None, 128, 128),  # MQA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, S, H, K, D, causal, window, bq, bk, dtype):
+        q = jax.random.normal(KEYS[2], (B, S, H, D), dtype)
+        k = jax.random.normal(KEYS[3], (B, S, K, D), dtype)
+        v = jax.random.normal(KEYS[4], (B, S, K, D), dtype)
+        out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                     bq=bq, bk=bk, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_matches_model_attention(self):
+        """Kernel == the model's chunked online-softmax path."""
+        from repro.models.attention import chunked_attention
+        B, S, H, K, D = 1, 128, 4, 2, 32
+        q = jax.random.normal(KEYS[5], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(KEYS[6], (B, S, K, D), jnp.float32)
+        v = jax.random.normal(KEYS[7], (B, S, K, D), jnp.float32)
+        pos = jnp.arange(S)
+        out_model = chunked_attention(q, k, v, q_positions=pos,
+                                      kv_positions=pos, causal=True,
+                                      window=None, q_block=32, kv_block=32)
+        out_kernel = flash_attention_pallas(q, k, v, causal=True,
+                                            bq=32, bk=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_model, np.float32),
+                                   np.asarray(out_kernel, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,T,K,G,D,window,bt", [
+        (2, 512, 2, 4, 64, None, 128),
+        (1, 256, 4, 1, 32, 64, 64),
+        (3, 1024, 2, 2, 64, None, 256),
+        (1, 128, 1, 8, 128, None, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, T, K, G, D, window, bt, dtype):
+        q = jax.random.normal(KEYS[0], (B, K, G, D), dtype)
+        k = jax.random.normal(KEYS[1], (B, T, K, D), dtype)
+        v = jax.random.normal(KEYS[2], (B, T, K, D), dtype)
+        idx = jax.random.randint(KEYS[3], (B,), T // 2, T)
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        pos = jnp.where(pos <= idx[:, None], pos, -1)
+        out = decode_attention_pallas(q, k, v, pos, idx, window=window,
+                                      bt=bt, interpret=True)
+        ref = decode_attention_ref(q, k, v, pos, idx, window=window)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_empty_cache_slots_masked(self):
+        B, T, K, G, D = 1, 64, 1, 2, 16
+        q = jax.random.normal(KEYS[4], (B, K, G, D))
+        k = jnp.full((B, T, K, D), 1e3)   # poison empty slots
+        v = jnp.full((B, T, K, D), 1e3)
+        k = k.at[:, :4].set(jax.random.normal(KEYS[5], (B, 4, K, D)))
+        v = v.at[:, :4].set(jax.random.normal(KEYS[6], (B, 4, K, D)))
+        pos = jnp.full((B, T), -1).at[:, :4].set(jnp.arange(4)[None])
+        idx = jnp.array([3])
+        out = decode_attention_pallas(q, k, v, pos, idx, bt=32,
+                                      interpret=True)
+        assert float(jnp.abs(out).max()) < 50.0  # poison never attended
