@@ -78,6 +78,29 @@ def bench_all() -> list[tuple[str, float, float]]:
     us = _time(dstep, params, tok, cache, idx)
     rows.append(("decode_step_smoke_b4", us, 4))
 
+    # two-phase serving runtime vs legacy stepwise absorption (B=4, S=32,
+    # max_new=8 on the smollm smoke config) — the PR's headline speedup
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.scheduler import Request
+    eng = InferenceEngine("bench", cfg_m, params, max_len=64)
+    rngp = np.random.RandomState(0)
+    prompts = rngp.randint(7, cfg_m.vocab_size, size=(4, 32)).astype(np.int32)
+    us_new = _time(lambda: eng.generate(prompts, 8)["tokens"], iters=10)
+    us_old = _time(lambda: eng.generate_stepwise(prompts, 8)["tokens"],
+                   iters=3, warmup=1)
+    rows.append(("generate_prefill_scan_b4_s32_n8", us_new, 4))
+    rows.append(("generate_stepwise_b4_s32_n8", us_old, 4))
+    rows.append(("prefill_vs_stepwise", us_new, round(us_old / us_new, 2)))
+
+    # batched streaming serve throughput (16 requests through 4 slots)
+    def serve_once():
+        reqs = [Request(rid=i, prompt=prompts[i % 4].tolist(), max_new=8)
+                for i in range(16)]
+        return eng.serve(reqs, n_slots=4, decode_chunk=8)
+    us_serve = _time(lambda: np.zeros(len(serve_once())), iters=3, warmup=1)
+    rows.append(("serve_16req_4slot_n8", us_serve,
+                 round(16 * 8 / (us_serve / 1e6), 1)))  # tokens/s
+
     # int8 error-feedback gradient compression
     from repro.training.compression import compress_with_feedback
     g = jax.random.normal(key, (1 << 20,))

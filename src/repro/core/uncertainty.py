@@ -21,6 +21,7 @@ the public API.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -87,29 +88,47 @@ def normalise_variance(v: Array, v_scale: float) -> Array:
     return v / (v + v_scale)
 
 
+def uncertainty_terms(logits: Array, tokens: Array,
+                      cfg: UncertaintyConfig) -> tuple[Array, Array]:
+    """Per-position (entropy, variance) terms of Eq. 2-3. (..., N) each.
+
+    Split out of ``difficulty`` so the streaming serve path can accumulate
+    terms token-by-token and combine them at request retirement.
+    """
+    if cfg.use_kernel:
+        from repro.kernels.swarm_uncertainty import ops as kops
+        return kops.uncertainty_terms(logits, tokens, k=cfg.top_k,
+                                      mode=cfg.mode)
+    h_per = (token_nent(logits, tokens) if cfg.mode == "token"
+             else dist_entropy(logits))
+    return h_per, topk_logit_variance(logits, cfg.top_k)
+
+
+def combine_terms(h_mean, v_mean, cfg: UncertaintyConfig):
+    """Eq. 4 from position-averaged terms -> U ∈ [0,1].
+
+    Pure arithmetic, so it also works on host scalars — the streaming serve
+    path combines per-request accumulators without a device round-trip.
+    """
+    if cfg.mode == "token":
+        h_mean = h_mean * math.e        # rescale [0, 1/e] -> [0, 1]
+    v_hat = normalise_variance(v_mean, cfg.v_scale)
+    if cfg.invert_variance:
+        v_hat = 1.0 - v_hat
+    return cfg.alpha * h_mean + (1.0 - cfg.alpha) * v_hat
+
+
 def difficulty(logits: Array, tokens: Array, cfg: UncertaintyConfig,
                mask: Array | None = None) -> Array:
     """Eq. 4 scalar difficulty score U ∈ [0,1]. logits (..., N, V)."""
-    if cfg.use_kernel:
-        from repro.kernels.swarm_uncertainty import ops as kops
-        h_per, v_per = kops.uncertainty_terms(
-            logits, tokens, k=cfg.top_k, mode=cfg.mode)
-    else:
-        h_per = (token_nent(logits, tokens) if cfg.mode == "token"
-                 else dist_entropy(logits))
-        v_per = topk_logit_variance(logits, cfg.top_k)
+    h_per, v_per = uncertainty_terms(logits, tokens, cfg)
     if mask is None:
         h, v = h_per.mean(-1), v_per.mean(-1)
     else:
         m = mask.astype(jnp.float32)
         d = jnp.maximum(m.sum(-1), 1.0)
         h, v = (h_per * m).sum(-1) / d, (v_per * m).sum(-1) / d
-    if cfg.mode == "token":
-        h = h * jnp.exp(1.0)       # rescale [0, 1/e] -> [0, 1]
-    v_hat = normalise_variance(v, cfg.v_scale)
-    if cfg.invert_variance:
-        v_hat = 1.0 - v_hat
-    return cfg.alpha * h + (1.0 - cfg.alpha) * v_hat
+    return combine_terms(h, v, cfg)
 
 
 @partial(jax.jit, static_argnames=("cfg",))

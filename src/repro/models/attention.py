@@ -171,12 +171,10 @@ def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
     return q, k, v
 
 
-def attn_block(p: dict, x: Array, cfg: ModelConfig, *, local: bool,
-               positions: Array | None = None) -> Array:
-    """Pre-norm residual attention over a full sequence. x (B,S,D)."""
-    B, S, D = x.shape
-    if positions is None:
-        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+def _attn_forward(p: dict, x: Array, cfg: ModelConfig, positions: Array,
+                  local: bool) -> tuple[Array, Array, Array]:
+    """Shared full-sequence body -> (x + attn(x), k, v) — single source of
+    truth for the training forward AND prefill so they cannot diverge."""
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     q, k, v = _project_qkv(p, h, cfg, positions)
     out = chunked_attention(
@@ -185,7 +183,46 @@ def attn_block(p: dict, x: Array, cfg: ModelConfig, *, local: bool,
         causal=cfg.causal, window=cfg.window if local else None,
         q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
-    return x + y
+    return x + y, k, v
+
+
+def attn_block(p: dict, x: Array, cfg: ModelConfig, *, local: bool,
+               positions: Array | None = None) -> Array:
+    """Pre-norm residual attention over a full sequence. x (B,S,D)."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out, _, _ = _attn_forward(p, x, cfg, positions, local)
+    return out
+
+
+def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
+                 cfg: ModelConfig, *, local: bool) -> tuple[Array, KVCache]:
+    """Prompt absorption: full-sequence attention + bulk KV-cache fill.
+
+    x (B,S,D); positions (B,S) absolute positions, identical across the
+    batch (the engine left-pads to a shape bucket).  Negative positions are
+    inert bucket padding: their K/V never enter the cache and attention
+    masks them out, so a bucketed prefill is numerics-neutral per row.
+    """
+    B, S, _ = x.shape
+    out, k, v = _attn_forward(p, x, cfg, positions, local)
+
+    T = cache.k.shape[1]
+    if local and cfg.window is not None and S > T:
+        # ring buffer: only the last T positions survive a stepwise fill
+        k, v, positions = k[:, S - T:], v[:, S - T:], positions[:, S - T:]
+    slot = positions % T if (local and cfg.window is not None) else positions
+    # invalid (negative-position) columns scatter out of bounds -> dropped
+    slot = jnp.where(positions >= 0, slot, T)
+    b = jnp.arange(B)[:, None]
+    cache = KVCache(
+        k=cache.k.at[b, slot].set(k.astype(cache.k.dtype), mode="drop"),
+        v=cache.v.at[b, slot].set(v.astype(cache.v.dtype), mode="drop"),
+        pos=cache.pos.at[b, slot].set(positions.astype(jnp.int32),
+                                      mode="drop"),
+    )
+    return out, cache
 
 
 def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,

@@ -82,6 +82,38 @@ def rglru_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
     return x + y
 
 
+def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
+                  cfg: ModelConfig) -> tuple[Array, RGLRUState]:
+    """Prompt absorption: full-sequence associative scan that also returns
+    the carried recurrent state for decode.
+
+    positions (B,S): negative positions are inert bucket padding — their
+    conv input is zeroed and their recurrence step forced to (a=1, b=0),
+    so they pass the carried state through untouched.  The last column must
+    be a real token (prompts are left-padded).
+    """
+    valid = (positions >= 0)[..., None]                      # (B,S,1)
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    u = h @ p["w_in"].astype(h.dtype)
+    g = gelu(h @ p["w_branch"].astype(h.dtype))
+    u = jnp.where(valid, u, 0)
+    u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"], prev=state.conv)
+    a, b = _gates(p, u)
+    a = jnp.where(valid, a, 1.0)
+    b = jnp.where(valid, b, 0.0)
+    # fold the incoming state into the first step: h_1 = a_1 h_0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * state.h)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hseq.astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
+    return x + y, RGLRUState(h=hseq[:, -1], conv=conv_tail)
+
+
 def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
     W = cfg.rnn_width or cfg.d_model
     return RGLRUState(

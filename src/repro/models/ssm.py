@@ -177,6 +177,41 @@ def ssd_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
     return x + y @ p["out_proj"].astype(x.dtype)
 
 
+def ssd_prefill(p: dict, x: Array, state: SSMState, positions: Array,
+                cfg: ModelConfig) -> tuple[Array, SSMState]:
+    """Prompt absorption: chunked SSD scan that also returns the carried
+    (B,H,P,N) state and conv tail for decode.
+
+    positions (B,S): negative positions are inert bucket padding — their
+    conv input is zeroed and dt forced to 0, so the step decay is exp(0)=1
+    and the input contribution x*dt vanishes; the carried state passes
+    through untouched.  The last column must be a real token.
+    """
+    d_inner, H, P, G, N, conv_dim, _ = _dims(cfg)
+    B, S, _ = x.shape
+    valid = (positions >= 0)[..., None]                      # (B,S,1)
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"].astype(h.dtype)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC = jnp.where(valid, xBC, 0)
+    xBC, conv_tail = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                  prev=state.conv)
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    y, s_final = ssd_scan(xs.reshape(B, S, H, P), dt, A, Bm, Cm,
+                          cfg.ssm_chunk, init_state=state.ssd)
+    y = y + xs.reshape(B, S, H, P).astype(jnp.float32) * p["D_skip"][:, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                p["gnorm"], cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(x.dtype), \
+        SSMState(ssd=s_final, conv=conv_tail)
+
+
 def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
     d_inner, H, P, G, N, conv_dim, _ = _dims(cfg)
     return SSMState(

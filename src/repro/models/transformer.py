@@ -256,20 +256,30 @@ def cache_axes(cfg: ModelConfig) -> list:
     return out
 
 
-def _decode_block(bp: dict, x: Array, cache: LayerCache, index: Array,
-                  cfg: ModelConfig, kind: tuple[str, str],
-                  moe_groups: int, mesh=None, rules=None
+def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
+                  cfg: ModelConfig, kind: tuple[str, str], moe_groups: int,
+                  mesh=None, rules=None, *, is_prefill: bool
                   ) -> tuple[Array, LayerCache]:
+    """One block with cache update — shared by prefill (posarg = positions
+    (B,S)) and decode (posarg = index (B,)), so both paths always run the
+    same block structure."""
     mixer, f = kind
     if mixer in ("attn", "attn_local"):
-        x, kv = attention.attn_decode(bp["mixer"], x, cache.kv, index, cfg,
-                                      local=(mixer == "attn_local"))
+        fn = attention.attn_prefill if is_prefill else attention.attn_decode
+        x, kv = fn(bp["mixer"], x, cache.kv, posarg, cfg,
+                   local=(mixer == "attn_local"))
         cache = cache._replace(kv=kv)
     elif mixer == "rglru":
-        x, rg = rglru.rglru_decode(bp["mixer"], x, cache.rg, cfg)
+        if is_prefill:
+            x, rg = rglru.rglru_prefill(bp["mixer"], x, cache.rg, posarg, cfg)
+        else:
+            x, rg = rglru.rglru_decode(bp["mixer"], x, cache.rg, cfg)
         cache = cache._replace(rg=rg)
     elif mixer == "ssd":
-        x, s = ssm.ssd_decode(bp["mixer"], x, cache.ssd, cfg)
+        if is_prefill:
+            x, s = ssm.ssd_prefill(bp["mixer"], x, cache.ssd, posarg, cfg)
+        else:
+            x, s = ssm.ssd_decode(bp["mixer"], x, cache.ssd, cfg)
         cache = cache._replace(ssd=s)
     if f == "mlp":
         x = ffn.mlp_block(bp["ffn"], x, cfg)
@@ -279,35 +289,66 @@ def _decode_block(bp: dict, x: Array, cache: LayerCache, index: Array,
     return x, cache
 
 
-def decode_step(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
-                index: Array, *, moe_groups: int = 1, mesh=None,
-                rules: ShardingRules | None = None
-                ) -> tuple[Array, list]:
-    """tokens (B,1) int32; index (B,) positions. -> (logits (B,1,V), cache)."""
+def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
+                 posarg: Array, is_prefill: bool, moe_groups: int,
+                 mesh, rules) -> tuple[Array, list]:
+    """Embed -> staged cached blocks -> LM head, for prefill and decode."""
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.comp_dtype)
     x = constrain(x, ("act_batch", "act_seq", "act_embed"), mesh, rules)
     new_caches = []
     for sp, stage, sc in zip(params["stages"], cfg.stage_plan(), cache):
-        if stage.repeat == 1:
-            nsc = {}
+        def stage_body(x, lp, lc, stage=stage):
+            ncs = {}
             for i, kind in enumerate(stage.blocks):
-                x, nsc[f"b{i}"] = _decode_block(
-                    sp[f"b{i}"], x, sc[f"b{i}"], index, cfg, kind,
-                    moe_groups, mesh, rules)
-            new_caches.append(nsc)
+                x, ncs[f"b{i}"] = _cached_block(
+                    lp[f"b{i}"], x, lc[f"b{i}"], posarg, cfg, kind,
+                    moe_groups, mesh, rules, is_prefill=is_prefill)
+            return x, ncs
+
+        if stage.repeat == 1:
+            x, nsc = stage_body(x, sp, sc)
         else:
-            def scan_body(x, layer):
-                lp, lc = layer
-                ncs = {}
-                for i, kind in enumerate(stage.blocks):
-                    x, ncs[f"b{i}"] = _decode_block(
-                        lp[f"b{i}"], x, lc[f"b{i}"], index, cfg, kind,
-                        moe_groups, mesh, rules)
-                return x, ncs
-            x, nsc = jax.lax.scan(scan_body, x, (sp, sc))
-            new_caches.append(nsc)
+            x, nsc = jax.lax.scan(
+                lambda x, layer: stage_body(x, *layer), x, (sp, sc))
+        new_caches.append(nsc)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
     logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"), mesh, rules)
     return logits, new_caches
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
+            positions: Array, *, moe_groups: int = 1, mesh=None,
+            rules: ShardingRules | None = None) -> tuple[Array, list]:
+    """Absorb a whole prompt in one pass, populating every layer cache.
+
+    tokens (B,S) int32; positions (B,S) absolute positions (negative =>
+    inert bucket padding, see the per-mixer prefill docstrings).  Returns
+    (logits (B,S,V), cache) — the cache is ready for ``decode_step`` at
+    ``positions[:, -1] + 1``.  Reuses the full-sequence mixers (chunked
+    attention / associative scan / chunked SSD), so one jitted call replaces
+    S sequential ``decode_step`` dispatches.
+
+    Requires a FRESHLY INITIALISED cache: recurrent mixers fold their
+    carried state into the scan, but attention layers attend only over this
+    prompt's K/V — pre-existing cache entries are overwritten/ignored, so
+    continuation ("chunked") prefill is not yet supported for attn layers.
+
+    MoE caveat: expert capacity is computed over all B*S routed tokens
+    (training-forward semantics), whereas stepwise absorption routes B
+    tokens per step — so MoE prefill can drop different tokens than the
+    stepwise loop, and inert padding still competes for capacity (the
+    engine serves MoE configs through the stepwise loop for this reason).
+    """
+    return _cached_pass(params, cfg, tokens, cache, positions, True,
+                        moe_groups, mesh, rules)
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
+                index: Array, *, moe_groups: int = 1, mesh=None,
+                rules: ShardingRules | None = None
+                ) -> tuple[Array, list]:
+    """tokens (B,1) int32; index (B,) positions. -> (logits (B,1,V), cache)."""
+    return _cached_pass(params, cfg, tokens, cache, index, False,
+                        moe_groups, mesh, rules)

@@ -1,26 +1,130 @@
-"""Inference engine: cached autoregressive generation + integrated probe.
+"""Inference engine: two-phase serving runtime + integrated probe.
 
-The uncertainty probe (paper Sec. IV-B) is computed *inside* the serving
-loop from the logits the engine already produces — on TPU via the fused
-``swarm_uncertainty`` kernel — so difficulty estimation adds no extra
-forward pass: the paper's probe SLM "is" the local SLM.
+The runtime is the paper's edge hot path (Sec. VI latency) restructured the
+way production servers run it:
+
+  * **prefill** — the whole prompt is absorbed in ONE jitted pass
+    (``transformer.prefill``) that bulk-fills every layer cache, instead of
+    S sequential ``decode_step`` dispatches;
+  * **decode** — ``max_new`` steps run as a single ``lax.scan``; a full
+    ``generate`` fuses prefill + scan + probe into ONE device call;
+  * **continuous batching** — ``serve()`` streams requests through the
+    vLLM-style ``ContinuousBatcher``: admit into free slots, prefill the
+    slot, scan-decode over all slots, retire at stop token / max_new.
+
+Prompt shapes are bucketed (left-padded to the next power of two) so
+heterogeneous batches hit a handful of compilations; bucket padding uses
+negative positions, which every mixer's prefill treats as inert, so bucketed
+results are bitwise-identical to unbucketed ones.
+
+The uncertainty probe (paper Sec. IV-B) is computed *inside* the decode scan
+from the logits the engine already produces — difficulty estimation adds no
+extra forward pass: the paper's probe SLM "is" the local SLM.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.uncertainty import UncertaintyConfig, difficulty
+from repro.core import uncertainty as U
+from repro.core.uncertainty import UncertaintyConfig
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
+from repro.serving.scheduler import ContinuousBatcher, Request
 
 Array = jax.Array
+
+PAD = 0
+
+
+def bucket_len(s: int, granularity: int = 512, floor: int = 8) -> int:
+    """Shape bucket for prompt lengths: next power of two up to
+    ``granularity``, then multiples of ``2 * granularity`` (keeps the
+    chunked-attention / SSD block-divisibility asserts satisfied)."""
+    if s <= floor:
+        return floor
+    if s <= granularity:
+        return 1 << (s - 1).bit_length()
+    g2 = 2 * granularity
+    return -(-s // g2) * g2
+
+
+# ---------------------------------------------------------------------------
+# Jitted phases
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "max_len"))
+def _prefill_absorb(params, cfg: ModelConfig, prompts, s_orig, max_len: int):
+    """prompts (B, Sb) left-padded to a bucket; s_orig = pre-bucket length.
+    Returns (first greedy token (B,), its logits (B,V) f32, filled cache).
+    """
+    B, S = prompts.shape
+    cache = T.init_cache(cfg, B, max_len)
+    # columns left of the original padded prompt get negative positions and
+    # are inert in every mixer; real columns keep positions 0..s_orig-1
+    positions = jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None] - (S - s_orig), (B, S))
+    logits, cache = T.prefill(params, cfg, prompts, cache, positions)
+    last = logits[:, -1].astype(jnp.float32)
+    cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return cur, last, cache
+
+
+@partial(jax.jit, static_argnames=("cfg", "ucfg", "steps", "greedy",
+                                   "with_logits"))
+def _decode_scan(params, cfg: ModelConfig, cur, last, cache, pos, rng,
+                 ucfg: UncertaintyConfig, steps: int, greedy: bool,
+                 with_logits: bool = True):
+    """``steps`` decode iterations as one lax.scan.
+
+    cur (B,) token entering the span; last (B,V) its logits; pos (B,) its
+    absolute position.  Emits the tokens/logits *entering* each step (so the
+    first emitted token is the prefill argmax, matching the legacy stepwise
+    loop) plus the per-position Eq. 2-3 uncertainty terms.  The streaming
+    serve path passes with_logits=False so the (B, steps, V) stack is never
+    materialised as a jit output.
+    """
+    def body(carry, _):
+        cur, last, cache, pos, rng = carry
+        # Eq. 2-3 terms of the *emitted* token: cur was chosen from last
+        h, v = U.uncertainty_terms(last[:, None, :], cur[:, None], ucfg)
+        rng, sub = jax.random.split(rng)
+        logits, cache = T.decode_step(params, cfg, cur[:, None], cache, pos)
+        lg = logits[:, -1].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(lg, axis=-1)
+        else:
+            nxt = jax.random.categorical(sub, lg, axis=-1)
+        out = (cur, h[:, 0], v[:, 0]) + ((last,) if with_logits else ())
+        return (nxt.astype(jnp.int32), lg, cache, pos + 1, rng), out
+
+    carry, outs = jax.lax.scan(body, (cur, last, cache, pos, rng),
+                               length=steps)
+    toks, h_per, v_per = (o.swapaxes(0, 1) for o in outs[:3])
+    lgs = outs[3].swapaxes(0, 1) if with_logits else None
+    return toks, lgs, h_per, v_per, carry
+
+
+@partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "max_len",
+                                   "greedy"))
+def _generate_fused(params, cfg: ModelConfig, prompts, s_orig, rng,
+                    ucfg: UncertaintyConfig, max_new: int, max_len: int,
+                    greedy: bool):
+    """Whole generation — prefill, scanned decode and the Eq. 4 combine —
+    as ONE device call (nested jits trace inline)."""
+    B = prompts.shape[0]
+    cur, last, cache = _prefill_absorb(params, cfg, prompts, s_orig, max_len)
+    toks, lgs, h_per, v_per, _ = _decode_scan(
+        params, cfg, cur, last, cache, jnp.broadcast_to(s_orig, (B,)), rng,
+        ucfg, max_new, greedy)
+    u = U.combine_terms(h_per.mean(-1), v_per.mean(-1), ucfg)
+    return toks, lgs, u
 
 
 @partial(jax.jit, static_argnames=("cfg", "greedy"))
@@ -36,30 +140,78 @@ def _step(params, cfg: ModelConfig, tokens, cache, index, rng, greedy: bool):
 
 @dataclasses.dataclass
 class InferenceEngine:
-    """One swarm member: a model + its decode state machinery."""
+    """One swarm member: a model + its two-phase serving runtime."""
     name: str
     cfg: ModelConfig
     params: Any
     ucfg: UncertaintyConfig = dataclasses.field(default_factory=UncertaintyConfig)
     max_len: int = 128
 
+    # ------------------------------------------------------------------
+    def _cache_len(self, s_bucket: int, max_new: int) -> int:
+        need = s_bucket + max_new
+        if need <= self.max_len:
+            return self.max_len
+        return -(-need // 64) * 64          # bucket cache growth too
+
+    @property
+    def _has_moe(self) -> bool:
+        return any(f == "moe" for _, f in self.cfg.layer_plan())
+
+    def _bucket(self, prompts: np.ndarray) -> tuple[np.ndarray, int]:
+        B, S = prompts.shape
+        gran = max(self.cfg.attn_q_block, self.cfg.attn_kv_block)
+        Sb = bucket_len(S, gran)
+        if Sb == S:
+            return prompts, S
+        out = np.zeros((B, Sb), np.int32)
+        out[:, Sb - S:] = prompts
+        return out, S
+
+    # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int, *,
                  greedy: bool = True, seed: int = 0) -> dict:
         """prompts (B, S) int32, LEFT-padded with PAD=0 (HF batched-decode
         convention, so the last absorbed position is always the prompt end).
-        The prompt is absorbed teacher-forced through the cached decode
-        path; generated-token logits feed the Eq. 2-4 difficulty score.
+
+        Jitted prefill + one scanned decode, fused into a single device
+        call.  Generated-token logits feed the Eq. 2-4 difficulty score.
+
+        MoE configs fall back to the stepwise loop: parallel prefill would
+        compute expert capacity over all B*S prompt tokens at once (and
+        inert bucket padding would compete for capacity slots), changing
+        which tokens get routed vs. the per-step absorption semantics.
         """
+        if self._has_moe:
+            return self.generate_stepwise(prompts, max_new, greedy=greedy,
+                                          seed=seed)
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
-        cache = T.init_cache(self.cfg, B, self.max_len)
+        pb, s_orig = self._bucket(prompts)
+        max_len = self._cache_len(pb.shape[1], max_new)
+        toks, lgs, u = _generate_fused(
+            self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
+            jax.random.PRNGKey(seed), self.ucfg, int(max_new), max_len,
+            bool(greedy))
+        return {"tokens": np.asarray(toks),
+                "u": np.asarray(u),
+                "logits": lgs,
+                "prompt_lengths": (prompts != PAD).sum(axis=1)}
+
+    # ------------------------------------------------------------------
+    def generate_stepwise(self, prompts: np.ndarray, max_new: int, *,
+                          greedy: bool = True, seed: int = 0) -> dict:
+        """Legacy one-token-at-a-time absorption path (S + max_new jitted
+        dispatches).  Kept as the parity oracle for ``generate`` and as the
+        baseline for the prefill_vs_stepwise benchmark."""
+        prompts = np.asarray(prompts, np.int32)
+        B, S = prompts.shape
+        cache = T.init_cache(self.cfg, B, self._cache_len(S, max_new))
         cache = jax.tree.map(jnp.asarray, cache)
         rng = jax.random.PRNGKey(seed)
 
-        lengths = (prompts != 0).sum(axis=1)      # PAD=0
+        lengths = (prompts != PAD).sum(axis=1)
         nxt = None
-        # teacher-forced prompt absorption (static positions; PAD slots are
-        # overwritten later by real tokens for shorter prompts)
         for t in range(S):
             tok = jnp.asarray(prompts[:, t:t + 1])
             nxt, last_logits, cache = _step(
@@ -79,11 +231,138 @@ class InferenceEngine:
 
         tokens = jnp.stack(out_tokens, axis=1)              # (B, N)
         logits = jnp.stack(out_logits, axis=1)              # (B, N, V)
-        u = difficulty(logits, tokens, self.ucfg)           # (B,)
+        u = U.difficulty(logits, tokens, self.ucfg)         # (B,)
         return {"tokens": np.asarray(tokens),
                 "u": np.asarray(u),
                 "logits": logits,
                 "prompt_lengths": np.asarray(lengths)}
 
+    # ------------------------------------------------------------------
+    # Streaming serve: continuous batching over fixed decode slots
+    # ------------------------------------------------------------------
+
+    def _slot_batch_axes(self, max_len: int):
+        """Per-leaf batch axis of the cache pytree (stacked scan stages
+        carry their repeat dim in front of batch)."""
+        a1 = jax.eval_shape(lambda: T.init_cache(self.cfg, 1, max_len))
+        a2 = jax.eval_shape(lambda: T.init_cache(self.cfg, 2, max_len))
+        return jax.tree.map(
+            lambda x, y: next(i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                              if p != q), a1, a2)
+
+    def _slot_insert(self):
+        """Jitted cache splice, built once per engine (jit re-specialises on
+        shapes by itself, so one closure covers every max_len/n_slots)."""
+        fn = getattr(self, "_slot_insert_fn", None)
+        if fn is None:
+            axes = self._slot_batch_axes(self.max_len)
+
+            @jax.jit
+            def fn(slots, one, i):
+                return jax.tree.map(
+                    lambda s, o, ax: jax.lax.dynamic_update_index_in_dim(
+                        s, jax.lax.index_in_dim(o, 0, ax, keepdims=False),
+                        i, ax),
+                    slots, one, axes)
+            self._slot_insert_fn = fn
+        return fn
+
+    def serve(self, requests: Sequence[Request] | None = None, *,
+              batcher: ContinuousBatcher | None = None, n_slots: int = 4,
+              decode_chunk: int = 8, stop_token: int | None = None,
+              greedy: bool = True, seed: int = 0) -> list[dict]:
+        """Streaming entry point: requests flow through a ContinuousBatcher.
+
+        Loop: admit queued requests into free slots (each admission is one
+        jitted prefill that is spliced into the slot cache) -> one scanned
+        decode chunk over ALL slots -> record tokens / retire finished slots
+        (stop token or max_new) -> repeat until idle.  Requests are admitted
+        mid-flight as slots free up.
+
+        Returns one dict per finished request: {"rid", "tokens", "u"},
+        in completion order.  With ``greedy=True`` (default) tokens are
+        bitwise-identical to ``generate`` on the same prompt.
+        """
+        if self._has_moe:
+            raise NotImplementedError(
+                "streaming serve needs the parallel prefill, which is not "
+                "capacity-consistent for MoE configs — use generate()")
+        if (requests is None) == (batcher is None):
+            raise ValueError("pass exactly one of requests / batcher")
+        if batcher is None:
+            batcher = ContinuousBatcher(n_slots)
+            for r in requests:
+                batcher.submit(r)
+        if any(s is not None for s in batcher.slots):
+            # a slot occupied before this call has no prefilled cache here —
+            # decoding it would silently emit garbage
+            raise ValueError("serve() requires an un-admitted batcher: "
+                             "submit requests to the queue only")
+        n_slots = batcher.n_slots
+
+        pending = list(batcher.queue)
+        if not pending:
+            return []
+        gran = max(self.cfg.attn_q_block, self.cfg.attn_kv_block)
+        max_len = max(self._cache_len(bucket_len(len(r.prompt), gran),
+                                      r.max_new) for r in pending)
+
+        cache = jax.tree.map(jnp.asarray, T.init_cache(self.cfg, n_slots,
+                                                       max_len))
+        V = self.cfg.vocab_size
+        cur = jnp.zeros((n_slots,), jnp.int32)
+        last = jnp.zeros((n_slots, V), jnp.float32)
+        pos = jnp.zeros((n_slots,), jnp.int32)
+        rng = jax.random.PRNGKey(seed)
+        insert = self._slot_insert()
+
+        acc: dict[int, list] = {}       # rid -> [sum_h, sum_v, n]
+        results: list[dict] = []
+
+        def drain():
+            for req in batcher.drain_finished():
+                h, v, n = acc.pop(req.rid, (0.0, 0.0, 0))
+                d = max(n, 1)
+                results.append({"rid": req.rid,
+                                "tokens": np.asarray(req.generated, np.int32),
+                                "u": float(U.combine_terms(h / d, v / d,
+                                                           self.ucfg))})
+
+        while not batcher.idle:
+            for i in batcher.admit():
+                req = batcher.slots[i]
+                p = np.asarray(req.prompt, np.int32)[None]
+                pb, s_orig = self._bucket(p)
+                c1, l1, k1 = _prefill_absorb(
+                    self.params, self.cfg, jnp.asarray(pb),
+                    jnp.int32(s_orig), max_len)
+                cache = insert(cache, k1, i)
+                cur = cur.at[i].set(c1[0])
+                last = last.at[i].set(l1[0])
+                pos = pos.at[i].set(s_orig)
+
+            toks, _, h_per, v_per, carry = _decode_scan(
+                self.params, self.cfg, cur, last, cache, pos, rng,
+                self.ucfg, int(decode_chunk), bool(greedy),
+                with_logits=False)
+            cur, last, cache, pos, rng = carry
+            toks_np = np.asarray(toks)
+            h_np, v_np = np.asarray(h_per), np.asarray(v_per)
+
+            for t in range(decode_chunk):
+                active = batcher.active()
+                if not active:
+                    break
+                for i, req in active:
+                    a = acc.setdefault(req.rid, [0.0, 0.0, 0])
+                    a[0] += float(h_np[i, t])
+                    a[1] += float(v_np[i, t])
+                    a[2] += 1
+                batcher.record_tokens(toks_np[:, t], stop_token)
+            drain()
+        drain()
+        return results
+
+    # ------------------------------------------------------------------
     def token_count(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
-        return (np.asarray(prompts) != 0).sum(axis=1) + max_new
+        return (np.asarray(prompts) != PAD).sum(axis=1) + max_new

@@ -30,7 +30,7 @@ from repro.core.safety import safety_score
 from repro.data.workload import REFUSAL, is_correct
 from repro.serving.engine import InferenceEngine
 from repro.serving.simulator import NetworkSimulator
-from repro.serving.swarm import SwarmExecutor, pad_prompts
+from repro.serving.swarm import SwarmExecutor, pad_prompts, truncate_at_stop
 
 
 @dataclasses.dataclass
@@ -115,30 +115,46 @@ class Gateway:
         self.budget = phase_a.budget
 
         # --- swarm round for Level-1 queries (Alg. 1 l.13-14) ---
+        # answer normalisation (truncate_at_stop) is applied uniformly:
+        # local, swarm and cloud answers are clustered/graded the same way
+        stop = self.swarm.stop_token
         latency = probe_lat.copy()
         cost = np.zeros((B,))
-        answers = probe_res["tokens"].copy()
+        answers = truncate_at_stop(probe_res["tokens"].copy(), stop)
         consensus = np.full((B,), np.nan)
         swarm_mask = decision == SWARM
         if swarm_mask.any():
+            # the probe is usually a swarm member: reuse its generation
+            # instead of re-running it inside the round
+            pre = {j: (probe_res["tokens"][swarm_mask], u[swarm_mask])
+                   for j, m in enumerate(self.swarm.members)
+                   if m is self.probe}
             sw = self.swarm.collaborate(prompts[swarm_mask], self.max_new,
                                         member_mask=self.sim.member_up,
-                                        seed=seed)
+                                        seed=seed, precomputed=pre)
             consensus[swarm_mask] = sw["consensus_score"]
-            n_members = len(self.swarm.members)
-            edge_l = self.sim.edge_latency(
-                np.tile((plen[swarm_mask] + self.max_new)[:, None],
-                        (1, n_members)))
-            comm_l = self.sim.peer_comm(int(swarm_mask.sum()), n_members)
-            sw_lat = np.asarray(cm.latency_swarm(
-                jnp.asarray(edge_l), jnp.asarray(comm_l), self.lat_params,
-                quorum=self.quorum))
+            # Eq. 9 waits only on members that are actually up — down peers
+            # must not contribute an edge-latency term (fault injection was
+            # overstating swarm latency by tiling over all n_members)
+            up = np.asarray(self.sim.member_up, bool)
+            n_up = int(up.sum())
+            if n_up > 0:
+                edge_l = self.sim.edge_latency(
+                    np.tile((plen[swarm_mask] + self.max_new)[:, None],
+                            (1, n_up)))
+                comm_l = self.sim.peer_comm(int(swarm_mask.sum()), n_up)
+                sw_lat = np.asarray(cm.latency_swarm(
+                    jnp.asarray(edge_l), jnp.asarray(comm_l), self.lat_params,
+                    quorum=self.quorum))
+            else:
+                sw_lat = np.full((int(swarm_mask.sum()),),
+                                 self.lat_params.agg_overhead)
             latency[swarm_mask] += sw_lat
             b = cm.swarm_bytes(plen[swarm_mask].astype(float),
-                               float(self.max_new * n_members),
+                               float(self.max_new * n_up),
                                self.cost_params)
             cost[swarm_mask] += np.asarray(cm.cost_swarm(
-                (plen[swarm_mask] + self.max_new).astype(float) * n_members,
+                (plen[swarm_mask] + self.max_new).astype(float) * n_up,
                 b, self.cost_params))
             answers[swarm_mask] = sw["winner_tokens"]
 
@@ -156,7 +172,7 @@ class Gateway:
         if cloud_mask.any() and self.cloud is not None:
             cl = self.cloud.generate(prompts[cloud_mask], self.max_new,
                                      seed=seed)
-            answers[cloud_mask] = cl["tokens"]
+            answers[cloud_mask] = truncate_at_stop(cl["tokens"], stop)
             latency[cloud_mask] += self.sim.cloud_latency(
                 plen[cloud_mask] + self.max_new)
             cost[cloud_mask] += est_cost[cloud_mask]

@@ -67,6 +67,16 @@ class ContinuousBatcher:
     def active_mask(self) -> np.ndarray:
         return np.array([s is not None and not s.done for s in self.slots])
 
+    def active(self) -> list[tuple[int, Request]]:
+        """(slot id, request) pairs currently decoding."""
+        return [(i, s) for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
+
+    def drain_finished(self) -> list[Request]:
+        """Pop and return requests finished since the last drain."""
+        out, self.finished = self.finished, []
+        return out
+
     def record_tokens(self, tokens: np.ndarray, stop_token: int | None = None):
         """tokens (n_slots,) newest token per slot; retire finished requests."""
         for i, s in enumerate(self.slots):

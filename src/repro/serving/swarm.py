@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.consensus import PAD, batched_consensus
 from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import Request
 
 
 def pad_prompts(prompts: Sequence[Sequence[int]], length: int | None = None,
@@ -54,12 +55,23 @@ class SwarmExecutor:
     members: list[InferenceEngine]
     w_min: float = 0.05
     stop_token: int | None = None
+    streaming: bool = False      # route rounds through each member's serve()
+    serve_slots: int = 4         # decode slots when streaming
 
     def collaborate(self, prompts: np.ndarray, max_new: int, *,
                     member_mask: np.ndarray | None = None,
-                    seed: int = 0) -> dict:
+                    seed: int = 0,
+                    precomputed: dict[int, tuple] | None = None) -> dict:
         """prompts (B, S). member_mask (n,) bool marks *available* members
         (node-failure injection / quorum selection excludes the rest).
+
+        Each member answers the whole round in ONE batched engine invocation
+        (jitted prefill + scanned decode).  ``streaming=True`` instead feeds
+        the round through the member's continuous-batching ``serve`` path —
+        same greedy tokens, but sized for requests that arrive over time,
+        not for a round that is known upfront.  ``precomputed`` maps member
+        index -> (tokens (B, N), u (B,)) for members whose generations the
+        caller already has (the gateway's probe), so they are not re-run.
 
         Returns per-query consensus winners + scores + per-member outputs.
         """
@@ -73,9 +85,28 @@ class SwarmExecutor:
         for j, eng in enumerate(self.members):
             if not member_mask[j]:
                 continue
-            res = eng.generate(prompts, max_new, seed=seed + j)
-            answers[:, j, :] = truncate_at_stop(res["tokens"], self.stop_token)
-            u[:, j] = res["u"]
+            if precomputed is not None and j in precomputed:
+                toks, uj = precomputed[j]
+            elif self.streaming and not eng._has_moe:
+                # MoE members can't stream (no capacity-consistent parallel
+                # prefill) — they take the batched generate branch below
+                # the padded row (incl. leading PADs) is the request prompt,
+                # so per-request absorption matches batched generation
+                reqs = [Request(rid=i, prompt=prompts[i].tolist(),
+                                max_new=max_new) for i in range(B)]
+                fin = eng.serve(reqs, n_slots=min(B, self.serve_slots),
+                                seed=seed + j)
+                toks = np.zeros((B, max_new), np.int32)
+                uj = np.ones((B,), np.float32)
+                for r in fin:
+                    toks[r["rid"], :len(r["tokens"])] = r["tokens"]
+                    uj[r["rid"]] = r["u"]
+            else:
+                res = eng.generate(prompts, max_new, seed=seed + j)
+                toks, uj = res["tokens"], res["u"]
+            answers[:, j, :] = truncate_at_stop(np.asarray(toks, np.int32),
+                                                self.stop_token)
+            u[:, j] = uj
 
         # unavailable members keep PAD answers; give them zero support by
         # grouping them into a sentinel cluster with weight w_min (paper's

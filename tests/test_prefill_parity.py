@@ -1,0 +1,156 @@
+"""Prefill/decode parity + streaming-serve tests for the two-phase runtime.
+
+The jitted prefill + scanned decode path must reproduce the legacy stepwise
+absorption loop: bitwise-identical greedy tokens and matching difficulty
+scores u, for all three mixer kinds (attn, rglru+attn_local, ssd).  Bucketed
+prompt padding (inert negative positions) must be bitwise-neutral.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.uncertainty import UncertaintyConfig
+from repro.models import transformer as T
+from repro.serving import engine as E
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.swarm import pad_prompts
+
+MIXER_ARCHS = {
+    "attn": "smollm-135m",
+    "rglru": "recurrentgemma-2b",
+    "ssd": "mamba2-780m",
+}
+
+
+def _engine(arch: str) -> InferenceEngine:
+    cfg = dataclasses.replace(C.get_smoke(arch), vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return InferenceEngine(arch, cfg, params,
+                           UncertaintyConfig(mode="distribution"))
+
+
+@pytest.fixture(scope="module", params=sorted(MIXER_ARCHS))
+def engine(request):
+    return _engine(MIXER_ARCHS[request.param])
+
+
+# ragged lengths so the bucketed prefill also covers original PAD columns
+PROMPTS = [[3, 20, 195, 2], [3, 21, 196, 199, 2], [7, 9, 2]]
+
+
+class TestPrefillDecodeParity:
+    def test_tokens_and_u_match_stepwise(self, engine):
+        prompts = pad_prompts(PROMPTS)
+        new = engine.generate(prompts, 6)
+        old = engine.generate_stepwise(prompts, 6)
+        np.testing.assert_array_equal(new["tokens"], old["tokens"])
+        # u differs only by bf16 activation noise between the parallel and
+        # sequential absorption orders
+        np.testing.assert_allclose(new["u"], old["u"], atol=1e-4)
+
+    def test_bucket_padding_is_bitwise_neutral(self, engine):
+        """Extra bucket columns (negative positions) must not change any
+        generated logit: compare against a manual unbucketed invocation."""
+        prompts = pad_prompts(PROMPTS)     # S=5 -> bucket 8 inside generate
+        B, S = prompts.shape
+        res = engine.generate(prompts, 6)
+        toks, lgs, _ = E._generate_fused(
+            engine.params, engine.cfg, jnp.asarray(prompts), jnp.int32(S),
+            jax.random.PRNGKey(0), engine.ucfg, 6,
+            engine._cache_len(E.bucket_len(S), 6), True)
+        np.testing.assert_array_equal(res["tokens"], np.asarray(toks))
+        np.testing.assert_array_equal(np.asarray(res["logits"]),
+                                      np.asarray(lgs))
+
+    def test_moe_config_falls_back_to_stepwise(self):
+        """MoE expert capacity is token-count dependent, so the engine must
+        serve MoE configs through the stepwise loop (any prompt length,
+        legacy routing semantics) and refuse the streaming path."""
+        cfg = dataclasses.replace(C.get_smoke("deepseek-moe-16b"),
+                                  vocab_size=512)
+        eng = InferenceEngine("moe", cfg,
+                              T.init_params(cfg, jax.random.PRNGKey(0)))
+        # ragged length that no attention-block bucket divides
+        prompts = pad_prompts(PROMPTS + [[5] * 35])
+        res = eng.generate(prompts, 4)
+        old = eng.generate_stepwise(prompts, 4)
+        np.testing.assert_array_equal(res["tokens"], old["tokens"])
+        with pytest.raises(NotImplementedError):
+            eng.serve([Request(rid=0, prompt=[3, 20, 2], max_new=2)])
+
+    def test_prefill_cache_matches_stepwise_decode(self, engine):
+        """After prefill, continuing with decode_step must agree with the
+        stepwise loop's first continuation token."""
+        prompts = pad_prompts(PROMPTS)
+        new = engine.generate(prompts, 1)
+        old = engine.generate_stepwise(prompts, 1)
+        np.testing.assert_array_equal(new["tokens"], old["tokens"])
+
+
+class TestStreamingServe:
+    def test_serve_matches_generate(self, engine):
+        prompts = pad_prompts(PROMPTS)
+        res = engine.generate(prompts, 6)
+        reqs = [Request(rid=i, prompt=prompts[i].tolist(), max_new=6)
+                for i in range(len(PROMPTS))]
+        fin = engine.serve(reqs, n_slots=2, decode_chunk=4)
+        assert len(fin) == len(PROMPTS)
+        for r in fin:
+            np.testing.assert_array_equal(r["tokens"], res["tokens"][r["rid"]])
+            np.testing.assert_allclose(r["u"], res["u"][r["rid"]], atol=1e-5)
+
+    def test_midflight_admission_and_stop_token(self):
+        """More requests than slots -> admission happens mid-flight; a stop
+        token retires a request before max_new."""
+        eng = _engine(MIXER_ARCHS["attn"])
+        prompts = pad_prompts(PROMPTS)
+        base = eng.generate(prompts, 6)
+        stop = int(base["tokens"][0, 2])    # force an early retire for rid 0
+        reqs = [Request(rid=k, prompt=prompts[k % len(PROMPTS)].tolist(),
+                        max_new=6) for k in range(6)]   # 6 requests, 2 slots
+        batcher = ContinuousBatcher(2)
+        for r in reqs:
+            batcher.submit(r)
+        fin = eng.serve(batcher=batcher, decode_chunk=3, stop_token=stop)
+        assert len(fin) == 6 and batcher.idle
+        by_rid = {r["rid"]: r for r in fin}
+        # every request retired at its first stop-token occurrence (or ran
+        # to max_new), with the same greedy stream as batched generate
+        assert any(len(r["tokens"]) < 6 for r in fin)
+        for k, r in by_rid.items():
+            row = base["tokens"][k % len(PROMPTS)]
+            hits = np.where(row == stop)[0]
+            n = int(hits[0]) + 1 if len(hits) else 6
+            assert len(r["tokens"]) == n
+            np.testing.assert_array_equal(r["tokens"], row[:n])
+
+    def test_serve_empty_is_noop(self):
+        eng = _engine(MIXER_ARCHS["attn"])
+        assert eng.serve([]) == []
+
+    def test_serve_rejects_preadmitted_batcher(self):
+        eng = _engine(MIXER_ARCHS["attn"])
+        batcher = ContinuousBatcher(2)
+        batcher.submit(Request(rid=0, prompt=[3, 20, 2], max_new=2))
+        batcher.admit()
+        with pytest.raises(ValueError, match="un-admitted"):
+            eng.serve(batcher=batcher)
+
+    def test_swarm_streaming_matches_batched(self):
+        """A swarm round through the streaming serve path clusters the same
+        answers as the batched per-member invocation."""
+        from repro.serving.swarm import SwarmExecutor
+        eng = _engine(MIXER_ARCHS["attn"])
+        prompts = pad_prompts(PROMPTS)
+        batched = SwarmExecutor([eng, eng]).collaborate(prompts, 4)
+        streamed = SwarmExecutor([eng, eng], streaming=True,
+                                 serve_slots=2).collaborate(prompts, 4)
+        np.testing.assert_array_equal(batched["answers"],
+                                      streamed["answers"])
+        np.testing.assert_allclose(batched["u"], streamed["u"], atol=1e-5)
