@@ -101,6 +101,21 @@ def bench_all() -> list[tuple[str, float, float]]:
     rows.append(("serve_16req_4slot_n8", us_serve,
                  round(16 * 8 / (us_serve / 1e6), 1)))  # tokens/s
 
+    # mesh-sharded decode vs single-device (same B=4/S=32/max_new=8 smoke).
+    # The serving mesh spans whatever devices are live: on a 1-device
+    # container it is the degenerate (1, 1) mesh and the ratio measures the
+    # sharded runtime's overhead (expect ~1.0x); on real multi-device
+    # hardware it measures the actual data/tensor-parallel decode speedup.
+    from repro.launch.mesh import serving_mesh
+    mesh = serving_mesh(model_parallel=min(2, len(jax.devices())))
+    eng_sh = InferenceEngine("bench-sharded", cfg_m, params, max_len=64,
+                             mesh=mesh)
+    us_sh = _time(lambda: eng_sh.generate(prompts, 8)["tokens"], iters=10)
+    d, m = mesh.shape["data"], mesh.shape["model"]
+    rows.append((f"generate_sharded_mesh{d}x{m}_b4_s32_n8", us_sh, 4))
+    rows.append(("sharded_vs_single_decode", us_sh,
+                 round(us_new / us_sh, 2)))
+
     # int8 error-feedback gradient compression
     from repro.training.compression import compress_with_feedback
     g = jax.random.normal(key, (1 << 20,))

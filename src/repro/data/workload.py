@@ -157,14 +157,23 @@ class FactWorld:
                          for t in rng.choice(N_RISK, n_risk, replace=False)]
                 body = body[:seq - 1] + [SEP]
             else:
+                # free-text: fill to the study prompts' length and terminate
+                # with SEP so the mean-pooled risk *density* matches what
+                # safety_queries produces at inference time
                 n_risk = rng.randint(2, 4) if mode == 1 else rng.randint(0, 2)
                 body = [RISK0 + int(t)
                         for t in rng.choice(N_RISK, n_risk, replace=False)]
                 body += [FILL0 + int(t)
-                         for t in rng.randint(N_FILL, size=seq - 2 - n_risk)]
+                         for t in rng.randint(N_FILL, size=seq - 1 - n_risk)]
                 rng.shuffle(body)
-            labels[b] = int(n_risk >= 2)
-            toks[b, :len(body)] = body[:seq]
+                body = body + [SEP]
+            body = body[:seq]
+            # label what the model actually sees: truncation can drop risk
+            # tokens (e.g. a 2-risk ASK2 query at seq=6), and a mislabelled
+            # single-risk prompt teaches "any risk marker => flag"
+            labels[b] = int(sum(RISK0 <= t < RISK0 + N_RISK
+                                for t in body) >= 2)
+            toks[b, :len(body)] = body
         return toks, labels
 
 

@@ -9,6 +9,20 @@ otherwise it falls back down a chain of alternatives (ultimately replicated).
 This mirrors the MaxText/Flax `logical_axis_rules` pattern but is pure JAX:
 params are plain pytrees and the model definition produces a parallel pytree
 of logical-axis tuples (see ``models/*.py: param_axes``).
+
+Public entry points (consumed by training/train.py, launch/dryrun.py and
+the mesh-sharded serving engine — see docs/SHARDING.md):
+
+* ``spec_for(shape, logical, mesh, rules) -> PartitionSpec`` — one array.
+* ``tree_specs / tree_shardings`` — map ``spec_for`` over parallel
+  (shapes, logical-axes) pytrees; ``tree_shardings`` wraps the specs in
+  ``NamedSharding`` for jit in/out shardings and ``device_put``.
+* ``constrain(x, logical, mesh, rules)`` — ``with_sharding_constraint``
+  by logical names; a no-op when ``mesh`` is None, which is how the
+  serving/runtime code stays bit-identical off-mesh.
+* ``RULE_SETS``: ``default`` (training FSDP x TP), ``sp`` (sequence-
+  parallel prefill), ``serve`` (weights replicated over 'data', pure TP —
+  decode never re-gathers FSDP shards).
 """
 
 from __future__ import annotations
@@ -94,14 +108,30 @@ AXIS_PRIORITY = {
 }
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class ShardingRules:
-    """A rule set = param rules + activation rules (both overridable)."""
+    """A rule set = param rules + activation rules (both overridable).
+
+    Hashable by rule content so a rule set can ride through ``jax.jit`` as a
+    static argument (the serving engine closes its jitted prefill/decode
+    over (mesh, rules) this way).
+    """
 
     param_rules: Mapping[str, Chain] = dataclasses.field(
         default_factory=lambda: dict(PARAM_RULES))
     act_rules: Mapping[str, Chain] = dataclasses.field(
         default_factory=lambda: dict(ACT_RULES))
+
+    def _frozen(self) -> tuple:
+        return (tuple(sorted(self.param_rules.items())),
+                tuple(sorted(self.act_rules.items())))
+
+    def __hash__(self) -> int:
+        return hash(self._frozen())
+
+    def __eq__(self, other: object) -> bool:
+        return (isinstance(other, ShardingRules)
+                and self._frozen() == other._frozen())
 
     def with_overrides(self, *, params: Mapping[str, Chain] | None = None,
                        acts: Mapping[str, Chain] | None = None) -> "ShardingRules":

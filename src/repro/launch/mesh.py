@@ -38,6 +38,23 @@ def elastic_mesh(model_parallel: int = 16, pods: int = 1):
     return jax.make_mesh((data, model_parallel), ("data", "model"))
 
 
+def serving_mesh(model_parallel: int = 1):
+    """(data, model) mesh over the live devices for the serving runtime.
+
+    ``model_parallel`` is clamped down to the nearest divisor of the device
+    count; the remaining devices become the 'data' axis (decode slots /
+    request batch).  With one device this is the degenerate (1, 1) mesh —
+    the sharded engine code path with single-device placement, which the
+    parity tests use to keep the sharded runtime exercised in 1-CPU CI.
+    """
+    n = len(jax.devices())
+    model_parallel = max(1, min(model_parallel, n))
+    while n % model_parallel:
+        model_parallel -= 1
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
 def data_shards(mesh) -> int:
     """Number of batch shards = product of pod/data axis sizes."""
     n = 1

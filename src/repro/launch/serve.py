@@ -92,8 +92,14 @@ def build_gateway(train_steps: int = 150, quorum: int | None = None,
                   router_cfg: RouterConfig | None = None,
                   budget_total: float = 1.0, seed: int = 0,
                   world: FactWorld | None = None,
-                  calibrate: bool = True):
-    """Construct the full three-tier system (returns gateway + baselines)."""
+                  calibrate: bool = True, mesh=None):
+    """Construct the full three-tier system (returns gateway + baselines).
+
+    ``mesh`` (a ``launch.mesh.serving_mesh()`` (data, model) mesh) places
+    every tier's engine on the mesh: greedy routing decisions and tokens
+    are identical to the single-device gateway, but prefill/decode run
+    SPMD-partitioned (see docs/SHARDING.md).
+    """
     # a compact fact world so the smoke-scale tiers genuinely memorise it
     world = world or FactWorld(n_ent=16, n_rel=6)
     ucfg = UncertaintyConfig(alpha=1.0, mode="distribution")
@@ -111,11 +117,12 @@ def build_gateway(train_steps: int = 150, quorum: int | None = None,
                             two_hop=True, seed=seed + 3, num_layers=4,
                             world=world)
 
-    probe = InferenceEngine("probe-smollm", probe_cfg, probe_p, ucfg)
+    probe = InferenceEngine("probe-smollm", probe_cfg, probe_p, ucfg,
+                            mesh=mesh)
     peers = [probe,
-             InferenceEngine("edge-1b", e2_cfg, e2_p, ucfg),
-             InferenceEngine("edge-qwen", e3_cfg, e3_p, ucfg)]
-    cloud = InferenceEngine("cloud-fm", fm_cfg, fm_p, ucfg)
+             InferenceEngine("edge-1b", e2_cfg, e2_p, ucfg, mesh=mesh),
+             InferenceEngine("edge-qwen", e3_cfg, e3_p, ucfg, mesh=mesh)]
+    cloud = InferenceEngine("cloud-fm", fm_cfg, fm_p, ucfg, mesh=mesh)
     scfg, sparams = train_safety()
 
     rcfg = router_cfg or RouterConfig(tau_low=0.08, tau_high=0.22, sigma=0.7,
@@ -141,10 +148,20 @@ def main():
     ap.add_argument("--train-steps", type=int, default=400)
     ap.add_argument("--quorum", type=int, default=None)
     ap.add_argument("--budget", type=float, default=1.0)
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="serve on a (data, model) mesh over the live "
+                         "devices with this much tensor parallelism "
+                         "(0 = single-device engines)")
     args = ap.parse_args()
 
+    mesh = None
+    if args.model_parallel > 0:
+        from repro.launch.mesh import serving_mesh
+        mesh = serving_mesh(model_parallel=args.model_parallel)
+        print(f"[serve] mesh {dict(mesh.shape)}")
     gw, probe, cloud, world = build_gateway(args.train_steps, args.quorum,
-                                            budget_total=args.budget)
+                                            budget_total=args.budget,
+                                            mesh=mesh)
     queries = world.study_workload()
 
     log = gw.answer_batch(queries)

@@ -19,6 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import constrain
 from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, apply_rope,
                                  norm_def, normal_init, rmsnorm, rope_angles,
                                  zeros_init)
@@ -197,13 +198,17 @@ def attn_block(p: dict, x: Array, cfg: ModelConfig, *, local: bool,
 
 
 def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
-                 cfg: ModelConfig, *, local: bool) -> tuple[Array, KVCache]:
+                 cfg: ModelConfig, *, local: bool, mesh=None, rules=None
+                 ) -> tuple[Array, KVCache]:
     """Prompt absorption: full-sequence attention + bulk KV-cache fill.
 
     x (B,S,D); positions (B,S) absolute positions, identical across the
     batch (the engine left-pads to a shape bucket).  Negative positions are
     inert bucket padding: their K/V never enter the cache and attention
     masks them out, so a bucketed prefill is numerics-neutral per row.
+
+    On-mesh (mesh/rules set) the refreshed KV cache is pinned to its
+    logical-axis sharding so the bulk scatter does not un-shard it.
     """
     B, S, _ = x.shape
     out, k, v = _attn_forward(p, x, cfg, positions, local)
@@ -216,9 +221,12 @@ def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
     # invalid (negative-position) columns scatter out of bounds -> dropped
     slot = jnp.where(positions >= 0, slot, T)
     b = jnp.arange(B)[:, None]
+    kv_axes = ("act_batch", "act_kv_seq", "act_kv_heads", None)
     cache = KVCache(
-        k=cache.k.at[b, slot].set(k.astype(cache.k.dtype), mode="drop"),
-        v=cache.v.at[b, slot].set(v.astype(cache.v.dtype), mode="drop"),
+        k=constrain(cache.k.at[b, slot].set(k.astype(cache.k.dtype),
+                                            mode="drop"), kv_axes, mesh, rules),
+        v=constrain(cache.v.at[b, slot].set(v.astype(cache.v.dtype),
+                                            mode="drop"), kv_axes, mesh, rules),
         pos=cache.pos.at[b, slot].set(positions.astype(jnp.int32),
                                       mode="drop"),
     )
@@ -226,17 +234,27 @@ def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
 
 
 def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
-                cfg: ModelConfig, *, local: bool) -> tuple[Array, KVCache]:
-    """One-token decode. x (B,1,D); index (B,) absolute position of new token."""
+                cfg: ModelConfig, *, local: bool, mesh=None, rules=None
+                ) -> tuple[Array, KVCache]:
+    """One-token decode. x (B,1,D); index (B,) absolute position of new token.
+
+    On-mesh the one-row scatter and the attention contraction are pinned to
+    the cache's logical-axis sharding, so a scanned decode keeps the KV
+    cache sharded across steps (the scan carry would otherwise decay to
+    whatever layout GSPMD propagates from the first step).
+    """
     B = x.shape[0]
     T = cache.k.shape[1]
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     q, k_new, v_new = _project_qkv(p, h, cfg, index[:, None])
     slot = index % T if (local and cfg.window is not None) else index
     b = jnp.arange(B)
+    kv_axes = ("act_batch", "act_kv_seq", "act_kv_heads", None)
     cache = KVCache(
-        k=cache.k.at[b, slot].set(k_new[:, 0].astype(cache.k.dtype)),
-        v=cache.v.at[b, slot].set(v_new[:, 0].astype(cache.v.dtype)),
+        k=constrain(cache.k.at[b, slot].set(k_new[:, 0].astype(cache.k.dtype)),
+                    kv_axes, mesh, rules),
+        v=constrain(cache.v.at[b, slot].set(v_new[:, 0].astype(cache.v.dtype)),
+                    kv_axes, mesh, rules),
         pos=cache.pos.at[b, slot].set(index.astype(jnp.int32)),
     )
     G = cfg.num_heads // cfg.num_kv_heads
@@ -252,5 +270,7 @@ def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
     out = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cfg.comp_dtype), cache.v,
                      preferred_element_type=jnp.float32)
     out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    out = constrain(out, ("act_batch", None, "act_heads", "act_head_dim"),
+                    mesh, rules)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return x + y, cache

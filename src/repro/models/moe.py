@@ -17,6 +17,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+try:                                    # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.distributed.sharding import constrain
 from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, norm_def,
                                  normal_init, rmsnorm)
@@ -143,9 +148,9 @@ def moe_block(p: dict, x: Array, cfg: ModelConfig, *,
     if use_smap:
         from jax.sharding import PartitionSpec as P
         gspec = P(daxes if len(daxes) > 1 else daxes[0])
-        smap = lambda f: jax.shard_map(f, mesh=mesh,
-                                       in_specs=(gspec, gspec, gspec),
-                                       out_specs=gspec)
+        smap = lambda f: _shard_map(f, mesh=mesh,
+                                    in_specs=(gspec, gspec, gspec),
+                                    out_specs=gspec)
         buf = smap(_dispatch)(src, e_idx, c_idx)
     else:
         buf = _dispatch(src, e_idx, c_idx)

@@ -14,9 +14,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import constrain
 from repro.models.common import (ModelConfig, ParamDef, gelu, norm_def,
                                  normal_init, rmsnorm, zeros_init)
-from repro.models.ssm import _causal_conv
+from repro.models.ssm import _causal_conv, _causal_conv_step
 
 Array = jax.Array
 
@@ -83,7 +84,8 @@ def rglru_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
 
 
 def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
-                  cfg: ModelConfig) -> tuple[Array, RGLRUState]:
+                  cfg: ModelConfig, mesh=None, rules=None
+                  ) -> tuple[Array, RGLRUState]:
     """Prompt absorption: full-sequence associative scan that also returns
     the carried recurrent state for decode.
 
@@ -91,6 +93,9 @@ def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
     conv input is zeroed and their recurrence step forced to (a=1, b=0),
     so they pass the carried state through untouched.  The last column must
     be a real token (prompts are left-padded).
+
+    On-mesh the carried (B, W) state is pinned ``(act_batch,
+    act_ssm_inner)`` so the decode scan keeps it sharded across steps.
     """
     valid = (positions >= 0)[..., None]                      # (B,S,1)
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
@@ -111,7 +116,11 @@ def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
 
     _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
     y = (hseq.astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
-    return x + y, RGLRUState(h=hseq[:, -1], conv=conv_tail)
+    state = RGLRUState(
+        h=constrain(hseq[:, -1], ("act_batch", "act_ssm_inner"), mesh, rules),
+        conv=constrain(conv_tail, ("act_batch", None, "act_ssm_inner"),
+                       mesh, rules))
+    return x + y, state
 
 
 def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
@@ -122,14 +131,18 @@ def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
     )
 
 
-def rglru_decode(p: dict, x: Array, state: RGLRUState, cfg: ModelConfig
-                 ) -> tuple[Array, RGLRUState]:
+def rglru_decode(p: dict, x: Array, state: RGLRUState, cfg: ModelConfig,
+                 mesh=None, rules=None) -> tuple[Array, RGLRUState]:
     """One-token decode. x (B,1,D)."""
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     u = h @ p["w_in"].astype(h.dtype)
     g = gelu(h @ p["w_branch"].astype(h.dtype))
-    u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"], prev=state.conv)
+    u, conv_tail = _causal_conv_step(u, p["conv_w"], p["conv_b"], state.conv)
     a, b = _gates(p, u)                      # (B,1,W)
     h_new = a[:, 0] * state.h + b[:, 0]
     y = (h_new[:, None].astype(x.dtype) * g) @ p["w_out"].astype(x.dtype)
-    return x + y, RGLRUState(h=h_new, conv=conv_tail)
+    state = RGLRUState(
+        h=constrain(h_new, ("act_batch", "act_ssm_inner"), mesh, rules),
+        conv=constrain(conv_tail, ("act_batch", None, "act_ssm_inner"),
+                       mesh, rules))
+    return x + y, state

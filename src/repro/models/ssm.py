@@ -14,6 +14,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import constrain
 from repro.models.common import (ModelConfig, ParamDef, norm_def, normal_init,
                                  ones_init, rmsnorm, zeros_init)
 
@@ -87,6 +88,26 @@ def _causal_conv(xBC: Array, w: Array, b: Array, prev: Array | None = None):
         feature_group_count=C)
     out = jax.nn.silu(out + b.astype(out.dtype))
     tail = xpad[:, -(W - 1):] if W > 1 else jnp.zeros((B, 0, C), xBC.dtype)
+    return out, tail
+
+
+def _causal_conv_step(x: Array, w: Array, b: Array, prev: Array):
+    """One-token depthwise causal conv (decode path). x (B,1,C); prev
+    (B,W-1,C).  Same math as ``_causal_conv`` at L=1, but lowered as a
+    window multiply+sum instead of ``conv_general_dilated``: the per-step
+    conv op is pure overhead at L=1, and XLA CPU's SPMD partitioner
+    miscompiles (native crash) the grouped conv when C is sharded over
+    'model' while the batch dim is replicated — the sharded decode scan
+    hits exactly that layout whenever B doesn't divide the 'data' axis."""
+    B, _, C = x.shape
+    W = w.shape[0]
+    xpad = jnp.concatenate([prev, x], axis=1)            # (B, W, C)
+    # f32 window accumulation, rounded back to the activation dtype before
+    # bias+silu — the same numerics the conv lowering produces
+    out = (xpad.astype(jnp.float32) * w.astype(jnp.float32)[None]).sum(
+        axis=1, keepdims=True).astype(x.dtype)
+    out = jax.nn.silu(out + b.astype(out.dtype))
+    tail = xpad[:, 1:] if W > 1 else jnp.zeros((B, 0, C), x.dtype)
     return out, tail
 
 
@@ -178,7 +199,8 @@ def ssd_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
 
 
 def ssd_prefill(p: dict, x: Array, state: SSMState, positions: Array,
-                cfg: ModelConfig) -> tuple[Array, SSMState]:
+                cfg: ModelConfig, mesh=None, rules=None
+                ) -> tuple[Array, SSMState]:
     """Prompt absorption: chunked SSD scan that also returns the carried
     (B,H,P,N) state and conv tail for decode.
 
@@ -208,8 +230,12 @@ def ssd_prefill(p: dict, x: Array, state: SSMState, positions: Array,
     y = y.reshape(B, S, d_inner)
     y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                 p["gnorm"], cfg.norm_eps)
-    return x + y @ p["out_proj"].astype(x.dtype), \
-        SSMState(ssd=s_final, conv=conv_tail)
+    state = SSMState(
+        ssd=constrain(s_final, ("act_batch", "act_heads", None, None),
+                      mesh, rules),
+        conv=constrain(conv_tail, ("act_batch", None, "act_ssm_inner"),
+                       mesh, rules))
+    return x + y @ p["out_proj"].astype(x.dtype), state
 
 
 def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
@@ -220,15 +246,17 @@ def init_ssm_state(cfg: ModelConfig, batch: int) -> SSMState:
     )
 
 
-def ssd_decode(p: dict, x: Array, state: SSMState, cfg: ModelConfig
-               ) -> tuple[Array, SSMState]:
-    """One-token decode. x (B,1,D)."""
+def ssd_decode(p: dict, x: Array, state: SSMState, cfg: ModelConfig,
+               mesh=None, rules=None) -> tuple[Array, SSMState]:
+    """One-token decode. x (B,1,D).  On-mesh the carried (B,H,P,N) state is
+    pinned ``(act_batch, act_heads)``-sharded across the decode scan."""
     d_inner, H, P, G, N, conv_dim, _ = _dims(cfg)
     B = x.shape[0]
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     zxbcdt = h @ p["in_proj"].astype(h.dtype)
     z, xBC, dt = _split_proj(zxbcdt, cfg)
-    xBC, conv_tail = _causal_conv(xBC, p["conv_w"], p["conv_b"], prev=state.conv)
+    xBC, conv_tail = _causal_conv_step(xBC, p["conv_w"], p["conv_b"],
+                                       state.conv)
     xs = xBC[:, 0, :d_inner]
     Bm = xBC[:, 0, d_inner:d_inner + G * N].reshape(B, G, N)
     Cm = xBC[:, 0, d_inner + G * N:].reshape(B, G, N)
@@ -246,4 +274,9 @@ def ssd_decode(p: dict, x: Array, state: SSMState, cfg: ModelConfig
     y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
                 p["gnorm"], cfg.norm_eps)
     out = x + y @ p["out_proj"].astype(x.dtype)
-    return out, SSMState(ssd=s_new, conv=conv_tail)
+    state = SSMState(
+        ssd=constrain(s_new, ("act_batch", "act_heads", None, None),
+                      mesh, rules),
+        conv=constrain(conv_tail, ("act_batch", None, "act_ssm_inner"),
+                       mesh, rules))
+    return out, state

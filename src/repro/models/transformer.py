@@ -267,26 +267,59 @@ def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
     if mixer in ("attn", "attn_local"):
         fn = attention.attn_prefill if is_prefill else attention.attn_decode
         x, kv = fn(bp["mixer"], x, cache.kv, posarg, cfg,
-                   local=(mixer == "attn_local"))
+                   local=(mixer == "attn_local"), mesh=mesh, rules=rules)
         cache = cache._replace(kv=kv)
     elif mixer == "rglru":
         if is_prefill:
-            x, rg = rglru.rglru_prefill(bp["mixer"], x, cache.rg, posarg, cfg)
+            x, rg = rglru.rglru_prefill(bp["mixer"], x, cache.rg, posarg, cfg,
+                                        mesh=mesh, rules=rules)
         else:
-            x, rg = rglru.rglru_decode(bp["mixer"], x, cache.rg, cfg)
+            x, rg = rglru.rglru_decode(bp["mixer"], x, cache.rg, cfg,
+                                       mesh=mesh, rules=rules)
         cache = cache._replace(rg=rg)
     elif mixer == "ssd":
         if is_prefill:
-            x, s = ssm.ssd_prefill(bp["mixer"], x, cache.ssd, posarg, cfg)
+            x, s = ssm.ssd_prefill(bp["mixer"], x, cache.ssd, posarg, cfg,
+                                   mesh=mesh, rules=rules)
         else:
-            x, s = ssm.ssd_decode(bp["mixer"], x, cache.ssd, cfg)
+            x, s = ssm.ssd_decode(bp["mixer"], x, cache.ssd, cfg,
+                                  mesh=mesh, rules=rules)
         cache = cache._replace(ssd=s)
     if f == "mlp":
         x = ffn.mlp_block(bp["ffn"], x, cfg)
     elif f == "moe":
         x, _ = moe.moe_block(bp["ffn"], x, cfg, groups=moe_groups,
                              mesh=mesh, rules=rules)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), mesh, rules)
     return x, cache
+
+
+def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
+                    rules=None) -> list:
+    """Pin every cache leaf to its logical-axis sharding (no-op off-mesh).
+
+    Applied right after ``init_cache`` inside a jitted prefill and at the
+    exit of cache-splicing helpers, so the KV / recurrent state stays
+    ``act_batch``-sharded (with ``act_kv_seq``/``act_kv_heads`` claiming the
+    'model' axis where divisible) across the whole decode scan instead of
+    being re-laid-out by whatever GSPMD infers step to step.
+    """
+    if mesh is None:
+        return cache
+    from jax.sharding import NamedSharding
+
+    from repro.distributed.sharding import DEFAULT_RULES, spec_for
+    rules = rules or DEFAULT_RULES
+    axes = cache_axes(cfg)
+
+    def one(leaf, ax):
+        spec = spec_for(leaf.shape, ax, mesh, rules.act_rules)
+        return jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec))
+
+    # cache leaves are arrays; flatten_up_to leaves the parallel logical-axis
+    # tuples of ``cache_axes`` intact as the second argument
+    return jax.tree.map(one, cache, axes)
 
 
 def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,

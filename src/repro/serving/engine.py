@@ -20,6 +20,12 @@ results are bitwise-identical to unbucketed ones.
 The uncertainty probe (paper Sec. IV-B) is computed *inside* the decode scan
 from the logits the engine already produces — difficulty estimation adds no
 extra forward pass: the paper's probe SLM "is" the local SLM.
+
+With a ``(data, model)`` mesh attached (``launch/mesh.py::serving_mesh``)
+every phase runs SPMD-partitioned: parameters placed by the logical-axis
+rules, caches and batch dims sharded on 'data', jitted entry points built
+with explicit in/out shardings (docs/SHARDING.md).  Greedy tokens are
+bitwise-identical to the single-device path.
 """
 
 from __future__ import annotations
@@ -31,9 +37,11 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import uncertainty as U
 from repro.core.uncertainty import UncertaintyConfig
+from repro.distributed import sharding as sh
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
@@ -59,28 +67,35 @@ def bucket_len(s: int, granularity: int = 512, floor: int = 8) -> int:
 # Jitted phases
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "max_len"))
-def _prefill_absorb(params, cfg: ModelConfig, prompts, s_orig, max_len: int):
+@partial(jax.jit, static_argnames=("cfg", "max_len", "mesh", "rules"))
+def _prefill_absorb(params, cfg: ModelConfig, prompts, s_orig, max_len: int,
+                    mesh=None, rules=None):
     """prompts (B, Sb) left-padded to a bucket; s_orig = pre-bucket length.
     Returns (first greedy token (B,), its logits (B,V) f32, filled cache).
+
+    On-mesh (mesh + rules static args set) the fresh cache is pinned to its
+    logical-axis sharding before the prefill fills it, so the bulk KV
+    scatter and the carried recurrent states come out sharded.
     """
     B, S = prompts.shape
-    cache = T.init_cache(cfg, B, max_len)
+    cache = T.constrain_cache(T.init_cache(cfg, B, max_len), cfg, mesh, rules)
     # columns left of the original padded prompt get negative positions and
     # are inert in every mixer; real columns keep positions 0..s_orig-1
     positions = jnp.broadcast_to(
         jnp.arange(S, dtype=jnp.int32)[None] - (S - s_orig), (B, S))
-    logits, cache = T.prefill(params, cfg, prompts, cache, positions)
+    logits, cache = T.prefill(params, cfg, prompts, cache, positions,
+                              mesh=mesh, rules=rules)
     last = logits[:, -1].astype(jnp.float32)
+    last = sh.constrain(last, ("act_batch", "act_vocab"), mesh, rules)
     cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
     return cur, last, cache
 
 
 @partial(jax.jit, static_argnames=("cfg", "ucfg", "steps", "greedy",
-                                   "with_logits"))
+                                   "with_logits", "mesh", "rules"))
 def _decode_scan(params, cfg: ModelConfig, cur, last, cache, pos, rng,
                  ucfg: UncertaintyConfig, steps: int, greedy: bool,
-                 with_logits: bool = True):
+                 with_logits: bool = True, mesh=None, rules=None):
     """``steps`` decode iterations as one lax.scan.
 
     cur (B,) token entering the span; last (B,V) its logits; pos (B,) its
@@ -89,14 +104,21 @@ def _decode_scan(params, cfg: ModelConfig, cur, last, cache, pos, rng,
     loop) plus the per-position Eq. 2-3 uncertainty terms.  The streaming
     serve path passes with_logits=False so the (B, steps, V) stack is never
     materialised as a jit output.
+
+    On-mesh, the per-step logits are pinned ``(act_batch, act_vocab)`` and
+    every cache/state leaf is re-constrained inside the mixers, so the scan
+    carry keeps its sharding across all ``steps`` instead of collapsing to
+    whatever layout GSPMD infers for the loop body.
     """
     def body(carry, _):
         cur, last, cache, pos, rng = carry
         # Eq. 2-3 terms of the *emitted* token: cur was chosen from last
         h, v = U.uncertainty_terms(last[:, None, :], cur[:, None], ucfg)
         rng, sub = jax.random.split(rng)
-        logits, cache = T.decode_step(params, cfg, cur[:, None], cache, pos)
+        logits, cache = T.decode_step(params, cfg, cur[:, None], cache, pos,
+                                      mesh=mesh, rules=rules)
         lg = logits[:, -1].astype(jnp.float32)
+        lg = sh.constrain(lg, ("act_batch", "act_vocab"), mesh, rules)
         if greedy:
             nxt = jnp.argmax(lg, axis=-1)
         else:
@@ -112,24 +134,27 @@ def _decode_scan(params, cfg: ModelConfig, cur, last, cache, pos, rng,
 
 
 @partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "max_len",
-                                   "greedy"))
+                                   "greedy", "mesh", "rules"))
 def _generate_fused(params, cfg: ModelConfig, prompts, s_orig, rng,
                     ucfg: UncertaintyConfig, max_new: int, max_len: int,
-                    greedy: bool):
+                    greedy: bool, mesh=None, rules=None):
     """Whole generation — prefill, scanned decode and the Eq. 4 combine —
     as ONE device call (nested jits trace inline)."""
     B = prompts.shape[0]
-    cur, last, cache = _prefill_absorb(params, cfg, prompts, s_orig, max_len)
+    cur, last, cache = _prefill_absorb(params, cfg, prompts, s_orig, max_len,
+                                       mesh=mesh, rules=rules)
     toks, lgs, h_per, v_per, _ = _decode_scan(
         params, cfg, cur, last, cache, jnp.broadcast_to(s_orig, (B,)), rng,
-        ucfg, max_new, greedy)
+        ucfg, max_new, greedy, mesh=mesh, rules=rules)
     u = U.combine_terms(h_per.mean(-1), v_per.mean(-1), ucfg)
     return toks, lgs, u
 
 
-@partial(jax.jit, static_argnames=("cfg", "greedy"))
-def _step(params, cfg: ModelConfig, tokens, cache, index, rng, greedy: bool):
-    logits, cache = T.decode_step(params, cfg, tokens, cache, index)
+@partial(jax.jit, static_argnames=("cfg", "greedy", "mesh", "rules"))
+def _step(params, cfg: ModelConfig, tokens, cache, index, rng, greedy: bool,
+          mesh=None, rules=None):
+    logits, cache = T.decode_step(params, cfg, tokens, cache, index,
+                                  mesh=mesh, rules=rules)
     lg = logits[:, -1].astype(jnp.float32)
     if greedy:
         nxt = jnp.argmax(lg, axis=-1)
@@ -140,12 +165,106 @@ def _step(params, cfg: ModelConfig, tokens, cache, index, rng, greedy: bool):
 
 @dataclasses.dataclass
 class InferenceEngine:
-    """One swarm member: a model + its two-phase serving runtime."""
+    """One swarm member: a model + its two-phase serving runtime.
+
+    ``mesh`` (optional, from ``launch/mesh.py``) turns on the mesh-sharded
+    runtime: parameters are placed by the logical-axis ``rules`` (default
+    ``SERVE_RULES`` — weights replicated over 'data', tensor-parallel over
+    'model'), the KV/recurrent caches and every batch dimension shard over
+    'data', and the jitted prefill / scanned decode run with explicit in/out
+    shardings so XLA partitions one program across the mesh.  Greedy tokens
+    are the same as the single-device path; ``mesh=None`` (default) is
+    bit-for-bit the unsharded engine.
+    """
     name: str
     cfg: ModelConfig
     params: Any
     ucfg: UncertaintyConfig = dataclasses.field(default_factory=UncertaintyConfig)
     max_len: int = 128
+    mesh: Any = None                    # jax.sharding.Mesh with (data, model)
+    rules: Any = None                   # ShardingRules; default SERVE_RULES
+
+    def __post_init__(self):
+        self._mesh_jits: dict = {}
+        if self.mesh is None:
+            return
+        self.rules = self.rules or sh.SERVE_RULES
+        # explicit parameter placement: the logical-axis rules decide which
+        # dims shard ('heads'/'ffn'/'vocab' over 'model'); the rest replicate
+        self._param_sh = sh.tree_shardings(
+            self.params, T.param_axes(self.cfg), self.mesh, self.rules)
+        self.params = jax.device_put(self.params, self._param_sh)
+
+    # ------------------------------------------------------------------
+    # Sharded entry points (built lazily, cached per shape signature)
+    # ------------------------------------------------------------------
+
+    def _act_sh(self, shape, logical):
+        return NamedSharding(self.mesh, sh.spec_for(
+            shape, logical, self.mesh, self.rules.act_rules))
+
+    def _cache_sh(self, cache_or_avals):
+        specs = sh.tree_specs(cache_or_avals, T.cache_axes(self.cfg),
+                              self.mesh, self.rules.act_rules)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def _fused_sharded(self, B: int, Sb: int, max_len: int, max_new: int,
+                       greedy: bool):
+        """jitted prefill+decode with explicit in/out shardings: params by
+        rule, prompts/tokens/u sharded on 'data' (batch), logits on
+        ('data' batch x 'model' vocab)."""
+        key = ("fused", B, Sb, max_len, max_new, greedy)
+        fn = self._mesh_jits.get(key)
+        if fn is None:
+            cfg, ucfg, mesh, rules = self.cfg, self.ucfg, self.mesh, self.rules
+            rep = NamedSharding(mesh, P())
+
+            def body(params, prompts, s_orig, rng):
+                return _generate_fused(params, cfg, prompts, s_orig, rng,
+                                       ucfg, max_new, max_len, greedy,
+                                       mesh=mesh, rules=rules)
+
+            fn = jax.jit(
+                body,
+                in_shardings=(self._param_sh,
+                              self._act_sh((B, Sb), ("act_batch", None)),
+                              rep, rep),
+                out_shardings=(
+                    self._act_sh((B, max_new), ("act_batch", None)),
+                    self._act_sh((B, max_new, cfg.vocab_size),
+                                 ("act_batch", None, "act_vocab")),
+                    self._act_sh((B,), ("act_batch",))))
+            self._mesh_jits[key] = fn
+        return fn
+
+    def _decode_sharded(self, B: int, max_len: int, steps: int, greedy: bool):
+        """jitted decode chunk over the serve slots, explicit in/out
+        shardings for the slot state (cur/last/pos/cache)."""
+        key = ("decode", B, max_len, steps, greedy)
+        fn = self._mesh_jits.get(key)
+        if fn is None:
+            cfg, ucfg, mesh, rules = self.cfg, self.ucfg, self.mesh, self.rules
+            csh = self._cache_sh(
+                jax.eval_shape(lambda: T.init_cache(cfg, B, max_len)))
+            rep = NamedSharding(mesh, P())
+            b_sh = self._act_sh((B,), ("act_batch",))
+            v_sh = self._act_sh((B, cfg.vocab_size),
+                                ("act_batch", "act_vocab"))
+            n_sh = self._act_sh((B, steps), ("act_batch", None))
+
+            def body(params, cur, last, cache, pos, rng):
+                toks, _, h, v, carry = _decode_scan(
+                    params, cfg, cur, last, cache, pos, rng, ucfg, steps,
+                    greedy, with_logits=False, mesh=mesh, rules=rules)
+                return toks, h, v, carry
+
+            fn = jax.jit(
+                body,
+                in_shardings=(self._param_sh, b_sh, v_sh, csh, b_sh, rep),
+                out_shardings=(n_sh, n_sh, n_sh,
+                               (b_sh, v_sh, csh, b_sh, rep)))
+            self._mesh_jits[key] = fn
+        return fn
 
     # ------------------------------------------------------------------
     def _cache_len(self, s_bucket: int, max_new: int) -> int:
@@ -175,7 +294,12 @@ class InferenceEngine:
         convention, so the last absorbed position is always the prompt end).
 
         Jitted prefill + one scanned decode, fused into a single device
-        call.  Generated-token logits feed the Eq. 2-4 difficulty score.
+        call (SPMD-partitioned when the engine has a mesh).  Returns
+        ``{"tokens": (B, max_new) int32, "u": (B,) Eq. 4 difficulty,
+        "logits": (B, max_new, V) f32, "prompt_lengths": (B,)}`` — the
+        probe's generation *is* the local answer (paper Sec. IV-A), and the
+        Eq. 2-3 entropy/variance terms are computed on the scanned logits
+        at zero extra forward passes.
 
         MoE configs fall back to the stepwise loop: parallel prefill would
         compute expert capacity over all B*S prompt tokens at once (and
@@ -189,10 +313,16 @@ class InferenceEngine:
         B, S = prompts.shape
         pb, s_orig = self._bucket(prompts)
         max_len = self._cache_len(pb.shape[1], max_new)
-        toks, lgs, u = _generate_fused(
-            self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
-            jax.random.PRNGKey(seed), self.ucfg, int(max_new), max_len,
-            bool(greedy))
+        if self.mesh is not None:
+            fn = self._fused_sharded(B, pb.shape[1], max_len, int(max_new),
+                                     bool(greedy))
+            toks, lgs, u = fn(self.params, jnp.asarray(pb),
+                              jnp.int32(s_orig), jax.random.PRNGKey(seed))
+        else:
+            toks, lgs, u = _generate_fused(
+                self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
+                jax.random.PRNGKey(seed), self.ucfg, int(max_new), max_len,
+                bool(greedy))
         return {"tokens": np.asarray(toks),
                 "u": np.asarray(u),
                 "logits": lgs,
@@ -207,7 +337,10 @@ class InferenceEngine:
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
         cache = T.init_cache(self.cfg, B, self._cache_len(S, max_new))
-        cache = jax.tree.map(jnp.asarray, cache)
+        if self.mesh is not None:
+            cache = jax.device_put(cache, self._cache_sh(cache))
+        else:
+            cache = jax.tree.map(jnp.asarray, cache)
         rng = jax.random.PRNGKey(seed)
 
         lengths = (prompts != PAD).sum(axis=1)
@@ -216,7 +349,8 @@ class InferenceEngine:
             tok = jnp.asarray(prompts[:, t:t + 1])
             nxt, last_logits, cache = _step(
                 self.params, self.cfg, tok, cache,
-                jnp.full((B,), t, jnp.int32), rng, True)
+                jnp.full((B,), t, jnp.int32), rng, True,
+                mesh=self.mesh, rules=self.rules)
 
         out_tokens = []
         out_logits = []
@@ -227,7 +361,8 @@ class InferenceEngine:
             rng, sub = jax.random.split(rng)
             cur, last_logits, cache = _step(
                 self.params, self.cfg, cur[:, None], cache,
-                jnp.full((B,), S + n, jnp.int32), sub, greedy)
+                jnp.full((B,), S + n, jnp.int32), sub, greedy,
+                mesh=self.mesh, rules=self.rules)
 
         tokens = jnp.stack(out_tokens, axis=1)              # (B, N)
         logits = jnp.stack(out_logits, axis=1)              # (B, N, V)
@@ -256,14 +391,18 @@ class InferenceEngine:
         fn = getattr(self, "_slot_insert_fn", None)
         if fn is None:
             axes = self._slot_batch_axes(self.max_len)
+            cfg, mesh, rules = self.cfg, self.mesh, self.rules
 
             @jax.jit
             def fn(slots, one, i):
-                return jax.tree.map(
+                out = jax.tree.map(
                     lambda s, o, ax: jax.lax.dynamic_update_index_in_dim(
                         s, jax.lax.index_in_dim(o, 0, ax, keepdims=False),
                         i, ax),
                     slots, one, axes)
+                # keep the slot cache pinned to its logical-axis sharding so
+                # the splice doesn't force a re-layout before the next chunk
+                return T.constrain_cache(out, cfg, mesh, rules)
             self._slot_insert_fn = fn
         return fn
 
@@ -307,12 +446,21 @@ class InferenceEngine:
         max_len = max(self._cache_len(bucket_len(len(r.prompt), gran),
                                       r.max_new) for r in pending)
 
-        cache = jax.tree.map(jnp.asarray, T.init_cache(self.cfg, n_slots,
-                                                       max_len))
+        cache = T.init_cache(self.cfg, n_slots, max_len)
         V = self.cfg.vocab_size
         cur = jnp.zeros((n_slots,), jnp.int32)
         last = jnp.zeros((n_slots, V), jnp.float32)
         pos = jnp.zeros((n_slots,), jnp.int32)
+        if self.mesh is not None:
+            # place the slot state by the activation rules up front: batch
+            # on 'data', logits vocab on 'model', cache per cache_axes
+            cache = jax.device_put(cache, self._cache_sh(cache))
+            cur = jax.device_put(cur, self._act_sh(cur.shape, ("act_batch",)))
+            last = jax.device_put(last, self._act_sh(
+                last.shape, ("act_batch", "act_vocab")))
+            pos = jax.device_put(pos, self._act_sh(pos.shape, ("act_batch",)))
+        else:
+            cache = jax.tree.map(jnp.asarray, cache)
         rng = jax.random.PRNGKey(seed)
         insert = self._slot_insert()
 
@@ -335,16 +483,22 @@ class InferenceEngine:
                 pb, s_orig = self._bucket(p)
                 c1, l1, k1 = _prefill_absorb(
                     self.params, self.cfg, jnp.asarray(pb),
-                    jnp.int32(s_orig), max_len)
+                    jnp.int32(s_orig), max_len,
+                    mesh=self.mesh, rules=self.rules)
                 cache = insert(cache, k1, i)
                 cur = cur.at[i].set(c1[0])
                 last = last.at[i].set(l1[0])
                 pos = pos.at[i].set(s_orig)
 
-            toks, _, h_per, v_per, carry = _decode_scan(
-                self.params, self.cfg, cur, last, cache, pos, rng,
-                self.ucfg, int(decode_chunk), bool(greedy),
-                with_logits=False)
+            if self.mesh is not None:
+                toks, h_per, v_per, carry = self._decode_sharded(
+                    n_slots, max_len, int(decode_chunk), bool(greedy))(
+                        self.params, cur, last, cache, pos, rng)
+            else:
+                toks, _, h_per, v_per, carry = _decode_scan(
+                    self.params, self.cfg, cur, last, cache, pos, rng,
+                    self.ucfg, int(decode_chunk), bool(greedy),
+                    with_logits=False)
             cur, last, cache, pos, rng = carry
             toks_np = np.asarray(toks)
             h_np, v_np = np.asarray(h_per), np.asarray(v_per)

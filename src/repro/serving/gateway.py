@@ -83,6 +83,16 @@ class Gateway:
 
     # ------------------------------------------------------------------
     def answer_batch(self, queries: list[dict], seed: int = 0) -> GatewayLog:
+        """Algorithm 1 over one query batch.
+
+        queries: list of ``{"prompt": [tokens], "gold": int|None,
+        "category": "easy"|"hard"|"safety"}`` (see data/workload.py).
+        Returns a :class:`GatewayLog` with per-query routing decisions,
+        Eq. 2-4 difficulty, Eq. 5 safety scores, Eq. 7-12 latency/cost,
+        Eq. 14 consensus scores, final answers and correctness — the
+        record the Table III/IV/V metrics and Eq. 15-17 privacy terms are
+        computed from.
+        """
         B = len(queries)
         prompts = pad_prompts([q["prompt"] for q in queries])
         plen = (prompts != 0).sum(axis=1)

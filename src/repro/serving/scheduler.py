@@ -1,11 +1,15 @@
 """Serving-side scheduling: peer selection, quorum, continuous batching.
 
-* ``select_peers``: deadline-aware peer choice (objective O1) — rank peers
-  by predicted L_edge + L_comm and take the k that fit L_max.
+* ``select_peers``: deadline-aware peer choice (paper objective O1 /
+  Sec. IV-F) — rank peers by predicted L_edge + L_comm (Eq. 8-9 terms)
+  and take the k that fit the L_max deadline.  Inputs: (n,) predicted
+  latencies; output: (n,) bool mask of chosen peers.
 * ``ContinuousBatcher``: fixed-slot decode batching — requests stream into
   free slots, finished slots free immediately (vLLM-style iteration-level
   scheduling, shaped for the batched TPU decode step whose batch dim is
-  static).
+  static).  Drives the ``InferenceEngine.serve`` lifecycle documented in
+  docs/RUNTIME.md: admit -> prefill slot -> scanned decode chunk ->
+  retire at stop token / max_new.
 """
 
 from __future__ import annotations

@@ -73,7 +73,10 @@ class SwarmExecutor:
         index -> (tokens (B, N), u (B,)) for members whose generations the
         caller already has (the gateway's probe), so they are not re-run.
 
-        Returns per-query consensus winners + scores + per-member outputs.
+        Returns ``{"answers": (B, n, N) per-member tokens, "u": (B, n)
+        Eq. 4 difficulties, "winner_tokens": (B, N), "winner_member":
+        (B,), "consensus_score": (B,) best Eq. 14 cluster score,
+        "scores": (B, n)}``.
         """
         n = len(self.members)
         B = prompts.shape[0]

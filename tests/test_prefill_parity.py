@@ -3,10 +3,16 @@
 The jitted prefill + scanned decode path must reproduce the legacy stepwise
 absorption loop: bitwise-identical greedy tokens and matching difficulty
 scores u, for all three mixer kinds (attn, rglru+attn_local, ssd).  Bucketed
-prompt padding (inert negative positions) must be bitwise-neutral.
+prompt padding (inert negative positions) must be bitwise-neutral, and the
+mesh-sharded runtime (docs/SHARDING.md) must reproduce the single-device
+greedy stream — on the degenerate (1, 1) mesh bit-for-bit in-process, and
+on a real (data=4, model=2) mesh via an 8-fake-device subprocess.
 """
 
 import dataclasses
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -142,6 +148,30 @@ class TestStreamingServe:
         with pytest.raises(ValueError, match="un-admitted"):
             eng.serve(batcher=batcher)
 
+    def test_sharded_runtime_on_degenerate_mesh_is_bitwise_identical(self):
+        """The mesh-sharded engine on the (1, 1) serving mesh must be
+        bit-for-bit the unsharded engine — generate (tokens AND logits) and
+        the streaming serve path.  Keeps the sharded code path exercised in
+        single-device CI; real multi-device parity runs in the subprocess
+        test below."""
+        from repro.launch.mesh import serving_mesh
+        for arch in MIXER_ARCHS.values():
+            base = _engine(arch)
+            shard = InferenceEngine(arch, base.cfg, base.params, base.ucfg,
+                                    mesh=serving_mesh())
+            prompts = pad_prompts(PROMPTS)
+            r0 = base.generate(prompts, 6)
+            r1 = shard.generate(prompts, 6)
+            np.testing.assert_array_equal(r0["tokens"], r1["tokens"])
+            np.testing.assert_array_equal(np.asarray(r0["logits"]),
+                                          np.asarray(r1["logits"]))
+            fin = shard.serve([Request(rid=i, prompt=prompts[i].tolist(),
+                                       max_new=6)
+                               for i in range(len(PROMPTS))], n_slots=2)
+            for r in fin:
+                np.testing.assert_array_equal(r["tokens"],
+                                              r0["tokens"][r["rid"]])
+
     def test_swarm_streaming_matches_batched(self):
         """A swarm round through the streaming serve path clusters the same
         answers as the batched per-member invocation."""
@@ -154,3 +184,62 @@ class TestStreamingServe:
         np.testing.assert_array_equal(batched["answers"],
                                       streamed["answers"])
         np.testing.assert_allclose(batched["u"], streamed["u"], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Multi-device sharded parity (subprocess: the XLA host-device-count flag
+# must be set before jax initialises and must not leak into other tests)
+# ---------------------------------------------------------------------------
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, numpy as np
+from repro import configs as C
+from repro.core.uncertainty import UncertaintyConfig
+from repro.models import transformer as T
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import Request
+from repro.serving.swarm import pad_prompts
+from repro.launch.mesh import serving_mesh
+
+PROMPTS = [[3, 20, 195, 2], [3, 21, 196, 199, 2], [7, 9, 2], [5, 6, 7, 2]]
+mesh = serving_mesh(model_parallel=2)
+assert dict(mesh.shape) == {"data": 4, "model": 2}, mesh.shape
+for arch in ("smollm-135m", "recurrentgemma-2b", "mamba2-780m"):
+    cfg = dataclasses.replace(C.get_smoke(arch), vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ucfg = UncertaintyConfig(mode="distribution")
+    base = InferenceEngine(arch, cfg, params, ucfg)
+    shard = InferenceEngine(arch, cfg, params, ucfg, mesh=mesh)
+    prompts = pad_prompts(PROMPTS)
+    r0 = base.generate(prompts, 6)
+    r1 = shard.generate(prompts, 6)
+    np.testing.assert_array_equal(r0["tokens"], r1["tokens"])
+    np.testing.assert_allclose(r0["u"], r1["u"], atol=1e-4)
+    if arch == "smollm-135m":
+        # B=2 slots over data=4: the replicated-batch layout that used to
+        # crash XLA CPU's grouped-conv partitioner (see ssm._causal_conv_step)
+        fin = shard.serve([Request(rid=i, prompt=prompts[i].tolist(),
+                                   max_new=6) for i in range(len(PROMPTS))],
+                          n_slots=2, decode_chunk=3)
+        assert len(fin) == len(PROMPTS)
+        for r in fin:
+            np.testing.assert_array_equal(r["tokens"], r0["tokens"][r["rid"]])
+    print(arch, "ok", flush=True)
+print("RESULT ok")
+"""
+
+
+def test_sharded_generate_matches_single_device():
+    """Mesh-sharded generate/serve on a real (data=4, model=2) mesh emits
+    the same greedy tokens as the single-device engine, for all three
+    mixer kinds."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "RESULT ok" in proc.stdout, proc.stdout

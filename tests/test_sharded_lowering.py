@@ -46,6 +46,7 @@ for arch in %ARCHS%:
     with mesh:
         compiled = step.lower(abs_p, opt.abstract_state(abs_p), batch).compile()
     ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, list) else ca    # jax<0.5 returns [dict]
     out[arch] = {"flops": ca.get("flops", 0.0)}
 print("RESULT " + json.dumps(out))
 """

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve.
+
+Scans every ``*.md`` file in the repo (skipping dot-dirs and
+``experiments/``) for inline links ``[text](target)`` and verifies that
+relative targets exist on disk.  External (``http(s)://``, ``mailto:``)
+links and pure in-page anchors (``#...``) are ignored; a relative target's
+``#anchor`` suffix is stripped before the existence check.
+
+Exit code 0 when every link resolves, 1 otherwise (one line per broken
+link) — wired as the ``docs`` job in .github/workflows/ci.yml so the
+docs/ tree can't silently rot.
+
+  python tools/check_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline links, excluding images' src duplication concerns: [text](target)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {".git", ".github", "experiments", "__pycache__",
+              ".pytest_cache"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in _SKIP_DIRS and not d.startswith(".")]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check_file(path: str, root: str) -> list[str]:
+    broken = []
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    # drop fenced code blocks: links inside ``` are examples, not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP_PREFIXES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = root if rel.startswith("/") else os.path.dirname(path)
+        resolved = os.path.normpath(os.path.join(base, rel.lstrip("/")))
+        if not os.path.exists(resolved):
+            broken.append(f"{os.path.relpath(path, root)}: broken link "
+                          f"-> {target}")
+    return broken
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1
+                           else os.path.join(os.path.dirname(__file__), ".."))
+    broken = []
+    n = 0
+    for path in md_files(root):
+        n += 1
+        broken += check_file(path, root)
+    for line in broken:
+        print(line)
+    print(f"[check_links] {n} markdown files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
