@@ -101,6 +101,25 @@ def bench_all() -> list[tuple[str, float, float]]:
     rows.append(("serve_16req_4slot_n8", us_serve,
                  round(16 * 8 / (us_serve / 1e6), 1)))  # tokens/s
 
+    # fused MoE serving vs stepwise (deepseek-style smoke: top-2 of 8
+    # routed + 2 shared experts, B=4/S=32/max_new=8).  The capacity-aware
+    # masked dispatch puts MoE configs on the same jitted-prefill +
+    # scanned-decode path as dense configs — this row is the CI guard that
+    # the fused path stays >= 3x the stepwise loop (ISSUE 3 acceptance).
+    cfg_moe = C.get_smoke("deepseek-moe-16b")
+    params_moe = T.init_params(cfg_moe, key)
+    eng_moe = InferenceEngine("bench-moe", cfg_moe, params_moe, max_len=64)
+    prompts_moe = rngp.randint(7, cfg_moe.vocab_size,
+                               size=(4, 32)).astype(np.int32)
+    us_moe = _time(lambda: eng_moe.generate(prompts_moe, 8)["tokens"],
+                   iters=10)
+    us_moe_sw = _time(lambda: eng_moe.generate_stepwise(
+        prompts_moe, 8)["tokens"], iters=3, warmup=1)
+    rows.append(("moe_generate_fused_b4_s32_n8", us_moe, 4))
+    rows.append(("moe_generate_stepwise_b4_s32_n8", us_moe_sw, 4))
+    rows.append(("moe_fused_vs_stepwise", us_moe,
+                 round(us_moe_sw / us_moe, 2)))
+
     # mesh-sharded decode vs single-device (same B=4/S=32/max_new=8 smoke).
     # The serving mesh spans whatever devices are live: on a 1-device
     # container it is the degenerate (1, 1) mesh and the ratio measures the

@@ -12,6 +12,11 @@ def config() -> ModelConfig:
         head_dim=128, d_ff=10944, vocab_size=102400,
         num_experts=64, num_shared_experts=2, top_k=6, expert_d_ff=1408,
         first_k_dense=1, capacity_factor=1.25,
+        # serving-path dispatch stays drop-free exact top-k (None): per-
+        # position groups are batch-sized, so the buffer is small anyway;
+        # set a float (e.g. 1.25) to bound it for very large serve batches
+        # at the cost of the stepwise-parity guarantee (docs/RUNTIME.md).
+        moe_serve_capacity_factor=None,
     )
 
 

@@ -12,6 +12,9 @@ def config() -> ModelConfig:
         head_dim=128, d_ff=8192, vocab_size=202048,
         num_experts=16, num_shared_experts=1, top_k=1, expert_d_ff=8192,
         rope_theta=500_000.0, capacity_factor=1.25,
+        # top-1 routing collides easily — keep serving dispatch drop-free
+        # (None => per-position capacity = batch size, exact top-1)
+        moe_serve_capacity_factor=None,
     )
 
 

@@ -90,6 +90,17 @@ ACT_RULES: dict[str, Chain] = {
     "act_ffn": _chain("model"),
     "act_experts": _chain("model"),
     "act_expert_cap": _chain(),
+    # serving-MoE dispatch tensors (docs/SHARDING.md "capacity buffer" rows):
+    # the per-position prefill buffer's group dim is the sequence — pinned
+    # unsharded (like act_seq) and the expert dim kept OFF 'model', so the
+    # 3-index dispatch scatter stays a per-group scatter instead of SPMD's
+    # dense select-update rewrite (see moe.moe_block's sharding note).
+    "act_moe_group": _chain(),
+    # decode's gathered top-k expert weights: batch('data') x replicated k/Fe
+    # — each data shard gathers only its own tokens' k weight rows from the
+    # 'model'-sharded resident experts.
+    "act_topk": _chain(),
+    "act_expert_ffn": _chain(),
     "act_ssm_inner": _chain("model"),
     "act_state": _chain(),
     "act_kv_seq": _chain("model"),               # KV-cache seq: fallback TP

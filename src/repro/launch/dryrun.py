@@ -164,9 +164,9 @@ def build_cell(cfg, shape, mesh, rules=None, force_mb: int | None = None):
     idx_sh = TR.batch_shardings({"t": spec["index"]}, mesh)["t"]
 
     def serve_step(params, tokens, cache, index):
+        # decode MoE dispatch is per-token exact top-k (no dispatch groups)
         logits, cache = T.decode_step(params, cfg, tokens, cache, index,
-                                      moe_groups=groups, mesh=mesh,
-                                      rules=rules)
+                                      mesh=mesh, rules=rules)
         return logits, cache
 
     fn = jax.jit(serve_step,

@@ -58,6 +58,16 @@ class ModelConfig:
     moe_every: int = 1                 # moe on layers where (i % moe_every)==moe_offset
     moe_offset: int = 0
     capacity_factor: float = 1.25
+    # serving-path (prefill) dispatch capacity: None = per-group capacity ==
+    # group size, i.e. drop-free exact top-k (fused generate bitwise-matches
+    # stepwise absorption); a float bounds it like the training dispatch
+    # (capacity = tokens*k/E*factor, overflow drops) — smaller buffers at
+    # large serve batches, no exactness guarantee.  See moe.moe_serve_capacity.
+    moe_serve_capacity_factor: float | None = None
+    # decode-step MoE impl: "dispatch" shares the prefill dispatch einsums
+    # (bitwise fused/stepwise/serve parity); "gather" pulls only the top-k
+    # experts' weight rows per token (k/E of the FLOPs, ~1 ulp noise).
+    moe_decode_impl: str = "dispatch"
 
     # ssm (mamba2 / SSD)
     ssm_state: int = 0

@@ -257,7 +257,7 @@ def cache_axes(cfg: ModelConfig) -> list:
 
 
 def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
-                  cfg: ModelConfig, kind: tuple[str, str], moe_groups: int,
+                  cfg: ModelConfig, kind: tuple[str, str],
                   mesh=None, rules=None, *, is_prefill: bool
                   ) -> tuple[Array, LayerCache]:
     """One block with cache update — shared by prefill (posarg = positions
@@ -288,8 +288,16 @@ def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
     if f == "mlp":
         x = ffn.mlp_block(bp["ffn"], x, cfg)
     elif f == "moe":
-        x, _ = moe.moe_block(bp["ffn"], x, cfg, groups=moe_groups,
-                             mesh=mesh, rules=rules)
+        # serving-path MoE: per-position masked dispatch in prefill (posarg
+        # is positions (B,S); negative = inert padding, excluded from the
+        # per-group capacity counts), constant-shape exact top-k in decode —
+        # both route exactly per-token, so fused == stepwise == serve.
+        if is_prefill:
+            x, _ = moe.moe_prefill_block(bp["ffn"], x, cfg, posarg,
+                                         mesh=mesh, rules=rules)
+        else:
+            x, _ = moe.moe_decode_block(bp["ffn"], x, cfg,
+                                        mesh=mesh, rules=rules)
     x = constrain(x, ("act_batch", "act_seq", "act_embed"), mesh, rules)
     return x, cache
 
@@ -323,7 +331,7 @@ def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
 
 
 def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
-                 posarg: Array, is_prefill: bool, moe_groups: int,
+                 posarg: Array, is_prefill: bool,
                  mesh, rules) -> tuple[Array, list]:
     """Embed -> staged cached blocks -> LM head, for prefill and decode."""
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.comp_dtype)
@@ -335,7 +343,7 @@ def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
             for i, kind in enumerate(stage.blocks):
                 x, ncs[f"b{i}"] = _cached_block(
                     lp[f"b{i}"], x, lc[f"b{i}"], posarg, cfg, kind,
-                    moe_groups, mesh, rules, is_prefill=is_prefill)
+                    mesh, rules, is_prefill=is_prefill)
             return x, ncs
 
         if stage.repeat == 1:
@@ -352,7 +360,7 @@ def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
 
 
 def prefill(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
-            positions: Array, *, moe_groups: int = 1, mesh=None,
+            positions: Array, *, mesh=None,
             rules: ShardingRules | None = None) -> tuple[Array, list]:
     """Absorb a whole prompt in one pass, populating every layer cache.
 
@@ -368,20 +376,25 @@ def prefill(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
     prompt's K/V — pre-existing cache entries are overwritten/ignored, so
     continuation ("chunked") prefill is not yet supported for attn layers.
 
-    MoE caveat: expert capacity is computed over all B*S routed tokens
-    (training-forward semantics), whereas stepwise absorption routes B
-    tokens per step — so MoE prefill can drop different tokens than the
-    stepwise loop, and inert padding still competes for capacity (the
-    engine serves MoE configs through the stepwise loop for this reason).
+    MoE layers run the capacity-aware masked serving dispatch
+    (``moe.moe_prefill_block``): one dispatch group per position, padding
+    tokens masked out of routing and capacity, so prefill makes the same
+    routing decisions as S sequential ``decode_step`` calls and bucket
+    padding is bitwise-neutral.
     """
     return _cached_pass(params, cfg, tokens, cache, positions, True,
-                        moe_groups, mesh, rules)
+                        mesh, rules)
 
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
-                index: Array, *, moe_groups: int = 1, mesh=None,
+                index: Array, *, mesh=None,
                 rules: ShardingRules | None = None
                 ) -> tuple[Array, list]:
-    """tokens (B,1) int32; index (B,) positions. -> (logits (B,1,V), cache)."""
+    """tokens (B,1) int32; index (B,) positions. -> (logits (B,1,V), cache).
+
+    MoE layers use the constant-shape exact top-k dispatch
+    (``moe.moe_decode_block``) — drop-free per-token routing, so batch
+    composition (serve slots, garbage in empty slots) can never change
+    another sequence's routing."""
     return _cached_pass(params, cfg, tokens, cache, index, False,
-                        moe_groups, mesh, rules)
+                        mesh, rules)

@@ -273,10 +273,6 @@ class InferenceEngine:
             return self.max_len
         return -(-need // 64) * 64          # bucket cache growth too
 
-    @property
-    def _has_moe(self) -> bool:
-        return any(f == "moe" for _, f in self.cfg.layer_plan())
-
     def _bucket(self, prompts: np.ndarray) -> tuple[np.ndarray, int]:
         B, S = prompts.shape
         gran = max(self.cfg.attn_q_block, self.cfg.attn_kv_block)
@@ -301,14 +297,12 @@ class InferenceEngine:
         Eq. 2-3 entropy/variance terms are computed on the scanned logits
         at zero extra forward passes.
 
-        MoE configs fall back to the stepwise loop: parallel prefill would
-        compute expert capacity over all B*S prompt tokens at once (and
-        inert bucket padding would compete for capacity slots), changing
-        which tokens get routed vs. the per-step absorption semantics.
+        MoE configs take this fused path too: prefill routes each position
+        as its own dispatch group with masked (capacity-excluded) bucket
+        padding, and decode uses the constant-shape exact top-k dispatch —
+        the same routing decisions the stepwise loop makes, so greedy
+        tokens match ``generate_stepwise`` (docs/RUNTIME.md, MoE routing).
         """
-        if self._has_moe:
-            return self.generate_stepwise(prompts, max_new, greedy=greedy,
-                                          seed=seed)
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
         pb, s_orig = self._bucket(prompts)
@@ -333,10 +327,18 @@ class InferenceEngine:
                           greedy: bool = True, seed: int = 0) -> dict:
         """Legacy one-token-at-a-time absorption path (S + max_new jitted
         dispatches).  Kept as the parity oracle for ``generate`` and as the
-        baseline for the prefill_vs_stepwise benchmark."""
+        baseline for the prefill_vs_stepwise benchmark.
+
+        The cache length is derived from the same ``_bucket`` shape
+        ``generate`` uses (only the real S columns are absorbed — inert
+        bucket columns would need decode-path negative-position support),
+        so ``_step`` specialises per (B, bucket) instead of re-jitting for
+        every exact (B, S) the parity tests and benchmarks throw at it."""
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
-        cache = T.init_cache(self.cfg, B, self._cache_len(S, max_new))
+        pb, _ = self._bucket(prompts)
+        cache = T.init_cache(self.cfg, B, self._cache_len(pb.shape[1],
+                                                          max_new))
         if self.mesh is not None:
             cache = jax.device_put(cache, self._cache_sh(cache))
         else:
@@ -420,12 +422,12 @@ class InferenceEngine:
 
         Returns one dict per finished request: {"rid", "tokens", "u"},
         in completion order.  With ``greedy=True`` (default) tokens are
-        bitwise-identical to ``generate`` on the same prompt.
+        bitwise-identical to ``generate`` on the same prompt.  MoE configs
+        stream like any other: admission prefills route per position and
+        the decode chunk routes exactly per token, so neither other
+        requests in flight nor garbage in empty slots can perturb a
+        request's expert routing.
         """
-        if self._has_moe:
-            raise NotImplementedError(
-                "streaming serve needs the parallel prefill, which is not "
-                "capacity-consistent for MoE configs — use generate()")
         if (requests is None) == (batcher is None):
             raise ValueError("pass exactly one of requests / batcher")
         if batcher is None:

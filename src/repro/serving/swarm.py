@@ -90,9 +90,7 @@ class SwarmExecutor:
                 continue
             if precomputed is not None and j in precomputed:
                 toks, uj = precomputed[j]
-            elif self.streaming and not eng._has_moe:
-                # MoE members can't stream (no capacity-consistent parallel
-                # prefill) — they take the batched generate branch below
+            elif self.streaming:
                 # the padded row (incl. leading PADs) is the request prompt,
                 # so per-request absorption matches batched generation
                 reqs = [Request(rid=i, prompt=prompts[i].tolist(),

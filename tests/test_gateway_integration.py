@@ -111,6 +111,39 @@ def test_privacy_log_consistency(system):
     np.testing.assert_allclose(log.cloud_usage(), float(pm.cer), atol=1e-6)
 
 
+def test_moe_swarm_member_answers_study_query():
+    """A MoE-config swarm member answers study queries end-to-end through
+    SwarmExecutor's streaming serve() path — the serve() MoE refusal is
+    gone, and the streamed answers are the member's own batched greedy
+    generation (so consensus sees real MoE answers, not a fallback)."""
+    import dataclasses
+
+    import jax
+
+    from repro import configs as C
+    from repro.data.workload import FactWorld
+    from repro.models import transformer as T
+    from repro.serving.engine import InferenceEngine
+    from repro.serving.swarm import SwarmExecutor, pad_prompts
+
+    cfg = dataclasses.replace(C.get_smoke("deepseek-moe-16b"),
+                              vocab_size=512)
+    moe = InferenceEngine("moe-member", cfg,
+                          T.init_params(cfg, jax.random.PRNGKey(1)))
+    queries = FactWorld().easy_queries(3)
+    prompts = pad_prompts([q["prompt"] for q in queries])
+    out = SwarmExecutor([moe, moe], streaming=True,
+                        serve_slots=2).collaborate(prompts, 4)
+    direct = moe.generate(prompts, 4)
+    assert out["answers"].shape == (3, 2, 4)
+    for j in range(2):
+        np.testing.assert_array_equal(out["answers"][:, j], direct["tokens"])
+    np.testing.assert_array_equal(out["winner_tokens"], direct["tokens"])
+    np.testing.assert_allclose(
+        out["u"], np.broadcast_to(direct["u"][:, None], out["u"].shape),
+        atol=1e-5)
+
+
 def test_scheduler_continuous_batching():
     from repro.serving.scheduler import ContinuousBatcher, Request
     cb = ContinuousBatcher(2)

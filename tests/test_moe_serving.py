@@ -1,0 +1,212 @@
+"""Serving-path MoE routing tests: capacity-aware masked dispatch.
+
+MoE configs are first-class citizens of the fused jitted-prefill +
+scanned-decode runtime (no ``generate`` stepwise fallback, no ``serve()``
+refusal).  The serving dispatch routes one group per prompt position with
+drop-free capacity, so the fused path makes exactly the routing decisions
+the sequential oracle makes:
+
+* fused ``generate`` == ``generate_stepwise`` greedy tokens, for
+  DeepSeek-style (top-6 + 2 shared) and Llama-4-Scout-style (top-1 +
+  shared) configs, on the no-mesh path and the degenerate (1, 1) serving
+  mesh (the real (4, 2) mesh runs in test_prefill_parity's subprocess);
+* bucket padding is bitwise-neutral end-to-end, and at the block level a
+  padding token can never consume a real expert's capacity slot — checked
+  with a capacity-bounded config where any stolen slot would displace a
+  real token;
+* streaming ``serve()`` reproduces batched ``generate`` (mixed-request
+  slot batches and garbage in empty slots cannot perturb routing).
+
+Param seeds are pinned per arch to keep greedy argmaxes away from exact
+bf16 logit ties: fused and stepwise absorption differ by ~1 ulp of
+activation noise (the same tolerance the dense parity tests document), so
+a random-init model whose top-2 logits collide bitwise would flip on
+noise, not on a routing difference.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.uncertainty import UncertaintyConfig
+from repro.models import moe as M
+from repro.models import transformer as T
+from repro.models.common import init_tree
+from repro.serving import engine as E
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import Request
+from repro.serving.swarm import pad_prompts
+
+MOE_ARCHS = {"deepseek-moe-16b": 1, "llama4-scout-17b-a16e": 0}
+
+PROMPTS = [[3, 20, 195, 2], [3, 21, 196, 199, 2], [7, 9, 2]]
+RAGGED = PROMPTS + [[5] * 35]       # a length no attention-block bucket divides
+
+
+def _engine(arch: str, mesh=None) -> InferenceEngine:
+    cfg = dataclasses.replace(C.get_smoke(arch), vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(MOE_ARCHS[arch]))
+    return InferenceEngine(arch, cfg, params,
+                           UncertaintyConfig(mode="distribution"), mesh=mesh)
+
+
+@pytest.fixture(scope="module", params=sorted(MOE_ARCHS))
+def engine(request):
+    return _engine(request.param)
+
+
+class TestFusedMoEParity:
+    def test_generate_takes_fused_path(self, engine, monkeypatch):
+        """Regression guard: MoE generate must never silently fall back to
+        the stepwise loop again."""
+        monkeypatch.setattr(
+            engine, "generate_stepwise",
+            lambda *a, **k: pytest.fail("MoE generate fell back to stepwise"))
+        res = engine.generate(pad_prompts(PROMPTS), 4)
+        assert res["tokens"].shape == (len(PROMPTS), 4)
+
+    def test_tokens_and_u_match_stepwise(self, engine):
+        prompts = pad_prompts(RAGGED)
+        new = engine.generate(prompts, 6)
+        old = engine.generate_stepwise(prompts, 6)
+        np.testing.assert_array_equal(new["tokens"], old["tokens"])
+        np.testing.assert_allclose(new["u"], old["u"], atol=1e-4)
+
+    def test_bucket_padding_is_bitwise_neutral(self, engine):
+        """Extra bucket columns (negative positions) must not change any
+        generated logit — masked routing keeps them out of every capacity
+        count, so padded and unpadded prompts dispatch identically."""
+        prompts = pad_prompts(PROMPTS)      # S=5 -> bucket 8 inside generate
+        B, S = prompts.shape
+        res = engine.generate(prompts, 6)
+        toks, lgs, _ = E._generate_fused(
+            engine.params, engine.cfg, jnp.asarray(prompts), jnp.int32(S),
+            jax.random.PRNGKey(0), engine.ucfg, 6,
+            engine._cache_len(E.bucket_len(S), 6), True)
+        np.testing.assert_array_equal(res["tokens"], np.asarray(toks))
+        np.testing.assert_array_equal(np.asarray(res["logits"]),
+                                      np.asarray(lgs))
+
+    def test_serve_matches_generate(self, engine):
+        prompts = pad_prompts(RAGGED)
+        res = engine.generate(prompts, 6)
+        fin = engine.serve([Request(rid=i, prompt=prompts[i].tolist(),
+                                    max_new=6) for i in range(len(RAGGED))],
+                           n_slots=2, decode_chunk=4)
+        assert len(fin) == len(RAGGED)
+        for r in fin:
+            np.testing.assert_array_equal(r["tokens"], res["tokens"][r["rid"]])
+            np.testing.assert_allclose(r["u"], res["u"][r["rid"]], atol=1e-5)
+
+    def test_degenerate_mesh_is_bitwise_identical(self):
+        """The sharded MoE engine on the (1, 1) serving mesh must be
+        bit-for-bit the unsharded engine — generate (tokens AND logits)
+        and the streaming serve path."""
+        from repro.launch.mesh import serving_mesh
+        for arch in MOE_ARCHS:
+            base = _engine(arch)
+            shard = InferenceEngine(arch, base.cfg, base.params, base.ucfg,
+                                    mesh=serving_mesh())
+            prompts = pad_prompts(PROMPTS)
+            r0 = base.generate(prompts, 6)
+            r1 = shard.generate(prompts, 6)
+            np.testing.assert_array_equal(r0["tokens"], r1["tokens"])
+            np.testing.assert_array_equal(np.asarray(r0["logits"]),
+                                          np.asarray(r1["logits"]))
+            fin = shard.serve([Request(rid=i, prompt=prompts[i].tolist(),
+                                       max_new=6)
+                               for i in range(len(PROMPTS))], n_slots=2)
+            for r in fin:
+                np.testing.assert_array_equal(r["tokens"],
+                                              r0["tokens"][r["rid"]])
+
+
+# ---------------------------------------------------------------------------
+# Block-level masked-dispatch semantics
+# ---------------------------------------------------------------------------
+
+def _moe_layer(cfg, key=0):
+    return init_tree(M.moe_defs(cfg), jax.random.PRNGKey(key), cfg.dtype)
+
+
+class TestMaskedDispatch:
+    def test_padding_never_consumes_capacity_slots(self):
+        """Bitwise routing invariance under a BINDING capacity: with the
+        serve capacity bounded to 1 slot/expert, a padding token that
+        slipped into a real expert's segment would displace a real token
+        (different dispatch -> different bits).  Padding embeddings are
+        scaled x10 so an unmasked router would definitely route them."""
+        cfg = dataclasses.replace(C.get_smoke("deepseek-moe-16b"),
+                                  moe_serve_capacity_factor=0.1)
+        B, S, P = 4, 8, 5
+        assert M.moe_serve_capacity(cfg, B) == 1     # binding
+        p = _moe_layer(cfg)
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        out, _ = M.moe_prefill_block(p, x, cfg, pos)
+
+        pad = 10.0 * jax.random.normal(jax.random.PRNGKey(4),
+                                       (B, P, cfg.d_model), jnp.bfloat16)
+        xp = jnp.concatenate([pad, x], axis=1)
+        pos_p = jnp.broadcast_to(
+            jnp.arange(S + P, dtype=jnp.int32)[None] - P, (B, S + P))
+        out_p, aux = M.moe_prefill_block(p, xp, cfg, pos_p)
+        np.testing.assert_array_equal(np.asarray(out_p[:, P:], jnp.float32),
+                                      np.asarray(out, jnp.float32))
+        assert np.isfinite(np.asarray(out_p, jnp.float32)).all()
+        assert np.isfinite(float(aux))
+
+    def test_prefill_dispatch_matches_decode_per_position(self):
+        """The per-position prefill dispatch IS the decode dispatch run at
+        every position: bitwise-identical block outputs — the property the
+        fused/stepwise greedy parity rests on."""
+        cfg = C.get_smoke("deepseek-moe-16b")
+        p = _moe_layer(cfg)
+        B, S = 4, 8
+        x = jax.random.normal(jax.random.PRNGKey(7), (B, S, cfg.d_model),
+                              jnp.bfloat16)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        full, _ = M.moe_prefill_block(p, x, cfg, pos)
+        steps = [M.moe_decode_block(p, x[:, s:s + 1], cfg)[0]
+                 for s in range(S)]
+        np.testing.assert_array_equal(
+            np.asarray(full, jnp.float32),
+            np.asarray(jnp.concatenate(steps, axis=1), jnp.float32))
+
+    def test_serve_capacity_knob(self):
+        cfg = C.get_smoke("deepseek-moe-16b")
+        assert cfg.moe_serve_capacity_factor is None
+        assert M.moe_serve_capacity(cfg, 16) == 16       # drop-free default
+        bounded = dataclasses.replace(cfg, moe_serve_capacity_factor=1.25)
+        assert 1 <= M.moe_serve_capacity(bounded, 64) <= 64
+        assert M.moe_serve_capacity(bounded, 64) == 24   # round8(64*2/8*1.25)
+        tiny = dataclasses.replace(cfg, moe_serve_capacity_factor=0.01)
+        assert M.moe_serve_capacity(tiny, 4) == 1        # floor at 1
+
+    def test_gather_decode_impl_close_to_dispatch(self):
+        """The opt-in top-k weight-gather decode (k/E of the expert FLOPs)
+        computes the same routed combination to activation-noise level."""
+        cfg = C.get_smoke("deepseek-moe-16b")
+        p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 1, cfg.d_model),
+                              jnp.bfloat16)
+        ref, _ = M.moe_decode_block(p, x, cfg)
+        gat, _ = M.moe_decode_block(
+            p, x, dataclasses.replace(cfg, moe_decode_impl="gather"))
+        np.testing.assert_allclose(np.asarray(gat, jnp.float32),
+                                   np.asarray(ref, jnp.float32),
+                                   atol=2e-2, rtol=2e-2)
+
+    def test_gather_decode_serves_end_to_end(self):
+        cfg = dataclasses.replace(C.get_smoke("deepseek-moe-16b"),
+                                  vocab_size=512, moe_decode_impl="gather")
+        eng = InferenceEngine("moe-gather", cfg,
+                              T.init_params(cfg, jax.random.PRNGKey(1)))
+        res = eng.generate(pad_prompts(PROMPTS), 4)
+        assert res["tokens"].shape == (len(PROMPTS), 4)
+        assert np.isfinite(res["u"]).all()

@@ -6,7 +6,9 @@ scores u, for all three mixer kinds (attn, rglru+attn_local, ssd).  Bucketed
 prompt padding (inert negative positions) must be bitwise-neutral, and the
 mesh-sharded runtime (docs/SHARDING.md) must reproduce the single-device
 greedy stream — on the degenerate (1, 1) mesh bit-for-bit in-process, and
-on a real (data=4, model=2) mesh via an 8-fake-device subprocess.
+on a real (data=4, model=2) mesh via an 8-fake-device subprocess (which
+also covers a MoE config; the MoE serving-dispatch semantics themselves
+live in tests/test_moe_serving.py).
 """
 
 import dataclasses
@@ -73,22 +75,6 @@ class TestPrefillDecodeParity:
         np.testing.assert_array_equal(res["tokens"], np.asarray(toks))
         np.testing.assert_array_equal(np.asarray(res["logits"]),
                                       np.asarray(lgs))
-
-    def test_moe_config_falls_back_to_stepwise(self):
-        """MoE expert capacity is token-count dependent, so the engine must
-        serve MoE configs through the stepwise loop (any prompt length,
-        legacy routing semantics) and refuse the streaming path."""
-        cfg = dataclasses.replace(C.get_smoke("deepseek-moe-16b"),
-                                  vocab_size=512)
-        eng = InferenceEngine("moe", cfg,
-                              T.init_params(cfg, jax.random.PRNGKey(0)))
-        # ragged length that no attention-block bucket divides
-        prompts = pad_prompts(PROMPTS + [[5] * 35])
-        res = eng.generate(prompts, 4)
-        old = eng.generate_stepwise(prompts, 4)
-        np.testing.assert_array_equal(res["tokens"], old["tokens"])
-        with pytest.raises(NotImplementedError):
-            eng.serve([Request(rid=0, prompt=[3, 20, 2], max_new=2)])
 
     def test_prefill_cache_matches_stepwise_decode(self, engine):
         """After prefill, continuing with decode_step must agree with the
@@ -207,7 +193,8 @@ from repro.launch.mesh import serving_mesh
 PROMPTS = [[3, 20, 195, 2], [3, 21, 196, 199, 2], [7, 9, 2], [5, 6, 7, 2]]
 mesh = serving_mesh(model_parallel=2)
 assert dict(mesh.shape) == {"data": 4, "model": 2}, mesh.shape
-for arch in ("smollm-135m", "recurrentgemma-2b", "mamba2-780m"):
+for arch in ("smollm-135m", "recurrentgemma-2b", "mamba2-780m",
+             "deepseek-moe-16b"):
     cfg = dataclasses.replace(C.get_smoke(arch), vocab_size=512)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     ucfg = UncertaintyConfig(mode="distribution")
@@ -235,7 +222,7 @@ print("RESULT ok")
 def test_sharded_generate_matches_single_device():
     """Mesh-sharded generate/serve on a real (data=4, model=2) mesh emits
     the same greedy tokens as the single-device engine, for all three
-    mixer kinds."""
+    mixer kinds plus a MoE ffn (masked serving dispatch under SPMD)."""
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
