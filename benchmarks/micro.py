@@ -120,6 +120,59 @@ def bench_all() -> list[tuple[str, float, float]]:
     rows.append(("moe_fused_vs_stepwise", us_moe,
                  round(us_moe_sw / us_moe, 2)))
 
+    # multi-turn sessions: cold re-prefill of the whole conversation every
+    # turn vs warm continuation prefill of only the new span (ISSUE 4
+    # tentpole).  Long context + short turns is the regime multi-turn chat
+    # lives in; the warm path's prefill cost is O(span), not O(history).
+    ctx = rngp.randint(7, cfg_m.vocab_size, size=(4, 192)).astype(np.int32)
+    turn = rngp.randint(7, cfg_m.vocab_size, size=(4, 8)).astype(np.int32)
+
+    def _multiturn_cold():
+        h = ctx
+        r = eng.generate(h, 8)
+        for _ in range(2):
+            h = np.concatenate([h, r["tokens"], turn], axis=1)
+            r = eng.generate(h, 8)
+        return r["tokens"]
+
+    def _multiturn_warm():
+        r = eng.generate(ctx, 8, return_state=True)
+        for _ in range(2):
+            r = eng.generate(turn, 8, state=r["state"], return_state=True)
+        return r["tokens"]
+    us_cold = _time(_multiturn_cold, iters=5, warmup=1)
+    us_warm = _time(_multiturn_warm, iters=5, warmup=1)
+    rows.append(("multiturn3_cold_reprefill_s192", us_cold, 4))
+    rows.append(("multiturn3_warm_continue_s192", us_warm, 4))
+    rows.append(("multiturn_cold_vs_warm", us_warm,
+                 round(us_cold / us_warm, 2)))
+
+    # escalated swarm round: the probe member re-prefilling its own prompt
+    # vs reusing the probe's answer + warm cache handle (the gateway path —
+    # zero probe dispatches in the round).  Long prompts are the regime the
+    # reuse targets (the probe prefill is the round's marginal cost).  CI
+    # smoke enforces the floor.
+    from repro.serving.swarm import SwarmExecutor
+    peer = InferenceEngine("bench-peer", cfg_m, params, max_len=64)
+    swarm = SwarmExecutor([eng, peer])
+    probe_res = eng.generate(ctx, 8, return_state=True)
+
+    def _round_reprefill():
+        return swarm.collaborate(ctx, 8)["winner_tokens"]
+
+    def _round_reuse():
+        pre = {0: (probe_res["tokens"], probe_res["u"],
+                   (probe_res["h_mean"], probe_res["v_mean"]))}
+        return swarm.collaborate(ctx, 8, precomputed=pre,
+                                 states={0: probe_res["state"]}
+                                 )["winner_tokens"]
+    us_re = _time(_round_reprefill, iters=5, warmup=1)
+    us_ru = _time(_round_reuse, iters=5, warmup=1)
+    rows.append(("swarm_round_reprefill_b4_s192_n8", us_re, 4))
+    rows.append(("swarm_round_probe_reuse_b4_s192_n8", us_ru, 4))
+    rows.append(("swarm_reprefill_vs_reuse", us_ru,
+                 round(us_re / us_ru, 2)))
+
     # mesh-sharded decode vs single-device (same B=4/S=32/max_new=8 smoke).
     # The serving mesh spans whatever devices are live: on a 1-device
     # container it is the degenerate (1, 1) mesh and the ratio measures the

@@ -32,8 +32,10 @@ def run_study(train_steps: int = 300, seed: int = 0,
                                             seed=seed)
     queries = world.study_workload()
     log = gw.answer_batch(queries)
-    edge = run_edge_only(queries, probe, gw.sim)
-    cl = run_cloud_only(queries, cloud, gw.sim)
+    # baselines graded on the SAME answer normalisation as the gateway
+    stop = gw.swarm.stop_token
+    edge = run_edge_only(queries, probe, gw.sim, stop_token=stop)
+    cl = run_cloud_only(queries, cloud, gw.sim, stop_token=stop)
 
     def t3(lg):
         return {"mean": float(lg.latency.mean()),

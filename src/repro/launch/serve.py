@@ -165,8 +165,10 @@ def main():
     queries = world.study_workload()
 
     log = gw.answer_batch(queries)
-    edge = run_edge_only(queries, probe, gw.sim)
-    cl = run_cloud_only(queries, cloud, gw.sim)
+    # baselines graded on the SAME answer normalisation as the gateway
+    stop = gw.swarm.stop_token
+    edge = run_edge_only(queries, probe, gw.sim, stop_token=stop)
+    cl = run_cloud_only(queries, cloud, gw.sim, stop_token=stop)
 
     print("\n=== Table III: latency & cloud usage ===")
     for name, lg in [("Edge-Only", edge), ("Cloud-Only", cl),

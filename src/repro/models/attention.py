@@ -197,32 +197,28 @@ def attn_block(p: dict, x: Array, cfg: ModelConfig, *, local: bool,
     return out
 
 
-def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
-                 cfg: ModelConfig, *, local: bool, mesh=None, rules=None
-                 ) -> tuple[Array, KVCache]:
-    """Prompt absorption: full-sequence attention + bulk KV-cache fill.
-
-    x (B,S,D); positions (B,S) absolute positions, identical across the
-    batch (the engine left-pads to a shape bucket).  Negative positions are
-    inert bucket padding: their K/V never enter the cache and attention
-    masks them out, so a bucketed prefill is numerics-neutral per row.
-
-    On-mesh (mesh/rules set) the refreshed KV cache is pinned to its
-    logical-axis sharding so the bulk scatter does not un-shard it.
-    """
-    B, S, _ = x.shape
-    out, k, v = _attn_forward(p, x, cfg, positions, local)
-
+def _scatter_kv(cache: KVCache, k: Array, v: Array, positions: Array,
+                cfg: ModelConfig, local: bool, mesh, rules) -> KVCache:
+    """Bulk-scatter roped span K/V into the cache at slot = position (ring
+    slot = position % T for windowed layers).  Negative-position columns
+    scatter out of bounds and are dropped."""
+    B, S = positions.shape
     T = cache.k.shape[1]
     if local and cfg.window is not None and S > T:
-        # ring buffer: only the last T positions survive a stepwise fill
-        k, v, positions = k[:, S - T:], v[:, S - T:], positions[:, S - T:]
+        # ring buffer: only the last T POSITIONS survive a stepwise fill.
+        # Mask by position rather than slicing columns — continuation spans
+        # are right-padded, so the last T columns of a bucketed span are
+        # not the last T real tokens (a column slice would drop recent real
+        # K/V and keep padding).  Older positions scatter out of bounds;
+        # their ring slots are overwritten by kept positions (every slot is
+        # covered) or hold stale entries the window mask already excludes.
+        pmax = positions.max(axis=1, keepdims=True)      # last real position
+        positions = jnp.where(positions > pmax - T, positions, -1)
     slot = positions % T if (local and cfg.window is not None) else positions
-    # invalid (negative-position) columns scatter out of bounds -> dropped
     slot = jnp.where(positions >= 0, slot, T)
     b = jnp.arange(B)[:, None]
     kv_axes = ("act_batch", "act_kv_seq", "act_kv_heads", None)
-    cache = KVCache(
+    return KVCache(
         k=constrain(cache.k.at[b, slot].set(k.astype(cache.k.dtype),
                                             mode="drop"), kv_axes, mesh, rules),
         v=constrain(cache.v.at[b, slot].set(v.astype(cache.v.dtype),
@@ -230,7 +226,53 @@ def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
         pos=cache.pos.at[b, slot].set(positions.astype(jnp.int32),
                                       mode="drop"),
     )
-    return out, cache
+
+
+def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
+                 cfg: ModelConfig, *, local: bool, continuation: bool = False,
+                 mesh=None, rules=None) -> tuple[Array, KVCache]:
+    """Prompt absorption: full-sequence attention + bulk KV-cache fill.
+
+    x (B,S,D); positions (B,S) absolute positions, identical across the
+    batch.  Negative positions are inert bucket padding: their K/V never
+    enter the cache and attention masks them out, so a bucketed prefill is
+    numerics-neutral per row.
+
+    ``continuation=False`` (cold): requires a freshly initialised cache and
+    a LEFT-padded span starting at position 0 — attention runs over the
+    span's own K/V only (the fast path: no cache-length-sized reads).
+
+    ``continuation=True`` (warm): the span is absorbed into an
+    *already-populated* cache at offset positions (engine right-pads the
+    span so padding never sits between the cached context and the new
+    tokens).  The span K/V are scattered into the cache first, then the
+    span queries attend over the **whole cache** — cached context and the
+    span itself — with the same causal / window / empty-slot (pos = -1)
+    masking the decode step uses, so a warm continuation reproduces
+    cold-prefilling the concatenation (bitwise greedy tokens; logits to
+    bf16 accumulation-order noise, see docs/RUNTIME.md).
+
+    On-mesh (mesh/rules set) the refreshed KV cache is pinned to its
+    logical-axis sharding so the bulk scatter does not un-shard it.
+    """
+    if not continuation:
+        out, k, v = _attn_forward(p, x, cfg, positions, local)
+        return out, _scatter_kv(cache, k, v, positions, cfg, local,
+                                mesh, rules)
+
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg, positions)
+    cache = _scatter_kv(cache, k, v, positions, cfg, local, mesh, rules)
+    # queries over the full cache: empty slots carry pos = -1 and are masked
+    # exactly like the decode step's mask (cache.pos rows are identical
+    # across the batch — batched sessions absorb identical position grids)
+    out = chunked_attention(
+        q, cache.k, cache.v,
+        q_positions=positions[0], kv_positions=cache.pos[0],
+        causal=cfg.causal, window=cfg.window if local else None,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + y, cache
 
 
 def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,

@@ -254,12 +254,18 @@ def moe_prefill_block(p: dict, x: Array, cfg: ModelConfig, positions: Array,
     x (B,S,D); positions (B,S) absolute positions — negative marks inert
     bucket padding.  Returns (x + moe(x), aux).
 
-    One dispatch group **per prompt position**: group s routes exactly the
+    One dispatch group **per span position**: group s routes exactly the
     B tokens a stepwise ``decode_step`` at position s would route, so
     per-group capacity (``moe_serve_capacity(cfg, B)``; default B itself,
     i.e. drop-free) and in-group arrival ranking reproduce sequential
     absorption semantics — the fused path and the stepwise oracle make
-    identical routing decisions by construction.
+    identical routing decisions by construction.  Continuation prefill
+    (``transformer.prefill(..., continuation=True)``) reuses this dispatch
+    unchanged: routing depends only on the hidden states and the valid
+    mask, never on the absolute position values, so a span absorbed at
+    offset positions over a live cache routes exactly as the same span
+    inside a cold prefill of the concatenation (fully-masked trailing
+    padding groups route to the sentinel segment and combine to zero).
 
     Padding tokens are masked three ways so padded and unpadded prompts
     dispatch identically: (1) router logits forced to -inf (no NaN:

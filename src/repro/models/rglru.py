@@ -84,15 +84,22 @@ def rglru_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
 
 
 def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
-                  cfg: ModelConfig, mesh=None, rules=None
-                  ) -> tuple[Array, RGLRUState]:
+                  cfg: ModelConfig, mesh=None, rules=None, *,
+                  continuation: bool = False) -> tuple[Array, RGLRUState]:
     """Prompt absorption: full-sequence associative scan that also returns
     the carried recurrent state for decode.
 
     positions (B,S): negative positions are inert bucket padding — their
     conv input is zeroed and their recurrence step forced to (a=1, b=0),
-    so they pass the carried state through untouched.  The last column must
-    be a real token (prompts are left-padded).
+    so they pass the carried state through untouched.  Cold spans are
+    left-padded (last column real); ``continuation=True`` spans are
+    RIGHT-padded so the conv window of the first new token reaches into
+    ``state.conv`` — the cached context tail — with no padding gap, and the
+    conv tail is taken at the last *real* column.  The recurrence folds
+    ``state.h`` into the first scan step either way (identity for the
+    all-zero cold state) and trailing padding passes the final state
+    through exactly, so warm continuation carries the same state cold
+    absorption of the concatenation would.
 
     On-mesh the carried (B, W) state is pinned ``(act_batch,
     act_ssm_inner)`` so the decode scan keeps it sharded across steps.
@@ -102,7 +109,10 @@ def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
     u = h @ p["w_in"].astype(h.dtype)
     g = gelu(h @ p["w_branch"].astype(h.dtype))
     u = jnp.where(valid, u, 0)
-    u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"], prev=state.conv)
+    tail_index = (valid[..., 0].sum(axis=1).astype(jnp.int32)
+                  if continuation else None)
+    u, conv_tail = _causal_conv(u, p["conv_w"], p["conv_b"], prev=state.conv,
+                                tail_index=tail_index)
     a, b = _gates(p, u)
     a = jnp.where(valid, a, 1.0)
     b = jnp.where(valid, b, 0.0)

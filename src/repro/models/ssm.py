@@ -74,8 +74,17 @@ def _split_proj(zxbcdt: Array, cfg: ModelConfig):
     return z, xBC, dt
 
 
-def _causal_conv(xBC: Array, w: Array, b: Array, prev: Array | None = None):
-    """Depthwise causal conv1d. xBC (B,L,C); w (W,C); returns (out, new_tail)."""
+def _causal_conv(xBC: Array, w: Array, b: Array, prev: Array | None = None,
+                 tail_index: Array | None = None):
+    """Depthwise causal conv1d. xBC (B,L,C); w (W,C); returns (out, new_tail).
+
+    ``tail_index`` (B,) — number of *real* (non-padding) leading columns per
+    row.  Default (None) takes the tail from the last W-1 columns, which is
+    correct for LEFT-padded spans (real tokens at the end).  Continuation
+    spans are RIGHT-padded (real tokens first, so the conv window of the
+    first real token reaches into ``prev`` — the cached context tail — with
+    no padding gap); there the tail must end at the last real input, i.e.
+    padded-input columns [tail_index, tail_index + W - 2]."""
     B, L, C = xBC.shape
     W = w.shape[0]
     if prev is None:
@@ -87,7 +96,13 @@ def _causal_conv(xBC: Array, w: Array, b: Array, prev: Array | None = None):
         dimension_numbers=("NWC", "WIO", "NWC"),
         feature_group_count=C)
     out = jax.nn.silu(out + b.astype(out.dtype))
-    tail = xpad[:, -(W - 1):] if W > 1 else jnp.zeros((B, 0, C), xBC.dtype)
+    if W <= 1:
+        tail = jnp.zeros((B, 0, C), xBC.dtype)
+    elif tail_index is None:
+        tail = xpad[:, -(W - 1):]
+    else:
+        idx = tail_index[:, None] + jnp.arange(W - 1, dtype=jnp.int32)[None]
+        tail = jnp.take_along_axis(xpad, idx[..., None], axis=1)
     return out, tail
 
 
@@ -199,15 +214,22 @@ def ssd_block(p: dict, x: Array, cfg: ModelConfig) -> Array:
 
 
 def ssd_prefill(p: dict, x: Array, state: SSMState, positions: Array,
-                cfg: ModelConfig, mesh=None, rules=None
-                ) -> tuple[Array, SSMState]:
+                cfg: ModelConfig, mesh=None, rules=None, *,
+                continuation: bool = False) -> tuple[Array, SSMState]:
     """Prompt absorption: chunked SSD scan that also returns the carried
     (B,H,P,N) state and conv tail for decode.
 
     positions (B,S): negative positions are inert bucket padding — their
     conv input is zeroed and dt forced to 0, so the step decay is exp(0)=1
     and the input contribution x*dt vanishes; the carried state passes
-    through untouched.  The last column must be a real token.
+    through untouched.  Cold spans are left-padded (last column real);
+    ``continuation=True`` spans are RIGHT-padded — real tokens first, so
+    the conv window crosses from ``state.conv`` (the cached context tail)
+    straight into the new span with no padding gap, and the conv tail is
+    taken at the last *real* column.  The recurrence itself is
+    layout-agnostic: ``state.ssd`` folds in as the scan's initial state and
+    padding steps pass it through exactly (decay 1, input 0), so the final
+    state equals the state after the last real token either way.
     """
     d_inner, H, P, G, N, conv_dim, _ = _dims(cfg)
     B, S, _ = x.shape
@@ -216,8 +238,10 @@ def ssd_prefill(p: dict, x: Array, state: SSMState, positions: Array,
     zxbcdt = h @ p["in_proj"].astype(h.dtype)
     z, xBC, dt = _split_proj(zxbcdt, cfg)
     xBC = jnp.where(valid, xBC, 0)
+    tail_index = (valid[..., 0].sum(axis=1).astype(jnp.int32)
+                  if continuation else None)
     xBC, conv_tail = _causal_conv(xBC, p["conv_w"], p["conv_b"],
-                                  prev=state.conv)
+                                  prev=state.conv, tail_index=tail_index)
     xs = xBC[..., :d_inner]
     Bm = xBC[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
     Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)

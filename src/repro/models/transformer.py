@@ -258,21 +258,28 @@ def cache_axes(cfg: ModelConfig) -> list:
 
 def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
                   cfg: ModelConfig, kind: tuple[str, str],
-                  mesh=None, rules=None, *, is_prefill: bool
-                  ) -> tuple[Array, LayerCache]:
+                  mesh=None, rules=None, *, is_prefill: bool,
+                  continuation: bool = False) -> tuple[Array, LayerCache]:
     """One block with cache update — shared by prefill (posarg = positions
     (B,S)) and decode (posarg = index (B,)), so both paths always run the
     same block structure."""
     mixer, f = kind
     if mixer in ("attn", "attn_local"):
-        fn = attention.attn_prefill if is_prefill else attention.attn_decode
-        x, kv = fn(bp["mixer"], x, cache.kv, posarg, cfg,
-                   local=(mixer == "attn_local"), mesh=mesh, rules=rules)
+        if is_prefill:
+            x, kv = attention.attn_prefill(
+                bp["mixer"], x, cache.kv, posarg, cfg,
+                local=(mixer == "attn_local"), continuation=continuation,
+                mesh=mesh, rules=rules)
+        else:
+            x, kv = attention.attn_decode(
+                bp["mixer"], x, cache.kv, posarg, cfg,
+                local=(mixer == "attn_local"), mesh=mesh, rules=rules)
         cache = cache._replace(kv=kv)
     elif mixer == "rglru":
         if is_prefill:
             x, rg = rglru.rglru_prefill(bp["mixer"], x, cache.rg, posarg, cfg,
-                                        mesh=mesh, rules=rules)
+                                        mesh=mesh, rules=rules,
+                                        continuation=continuation)
         else:
             x, rg = rglru.rglru_decode(bp["mixer"], x, cache.rg, cfg,
                                        mesh=mesh, rules=rules)
@@ -280,7 +287,8 @@ def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
     elif mixer == "ssd":
         if is_prefill:
             x, s = ssm.ssd_prefill(bp["mixer"], x, cache.ssd, posarg, cfg,
-                                   mesh=mesh, rules=rules)
+                                   mesh=mesh, rules=rules,
+                                   continuation=continuation)
         else:
             x, s = ssm.ssd_decode(bp["mixer"], x, cache.ssd, cfg,
                                   mesh=mesh, rules=rules)
@@ -332,7 +340,7 @@ def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
 
 def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
                  posarg: Array, is_prefill: bool,
-                 mesh, rules) -> tuple[Array, list]:
+                 mesh, rules, continuation: bool = False) -> tuple[Array, list]:
     """Embed -> staged cached blocks -> LM head, for prefill and decode."""
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.comp_dtype)
     x = constrain(x, ("act_batch", "act_seq", "act_embed"), mesh, rules)
@@ -343,7 +351,8 @@ def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
             for i, kind in enumerate(stage.blocks):
                 x, ncs[f"b{i}"] = _cached_block(
                     lp[f"b{i}"], x, lc[f"b{i}"], posarg, cfg, kind,
-                    mesh, rules, is_prefill=is_prefill)
+                    mesh, rules, is_prefill=is_prefill,
+                    continuation=continuation)
             return x, ncs
 
         if stage.repeat == 1:
@@ -360,30 +369,58 @@ def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
 
 
 def prefill(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
-            positions: Array, *, mesh=None,
+            positions: Array, *, continuation: bool = False, mesh=None,
             rules: ShardingRules | None = None) -> tuple[Array, list]:
-    """Absorb a whole prompt in one pass, populating every layer cache.
+    """Absorb a whole span in one pass, populating every layer cache.
 
     tokens (B,S) int32; positions (B,S) absolute positions (negative =>
     inert bucket padding, see the per-mixer prefill docstrings).  Returns
-    (logits (B,S,V), cache) — the cache is ready for ``decode_step`` at
-    ``positions[:, -1] + 1``.  Reuses the full-sequence mixers (chunked
+    (logits (B,S,V), cache) — the cache is ready for ``decode_step`` after
+    the last real position.  Reuses the full-sequence mixers (chunked
     attention / associative scan / chunked SSD), so one jitted call replaces
     S sequential ``decode_step`` dispatches.
 
-    Requires a FRESHLY INITIALISED cache: recurrent mixers fold their
-    carried state into the scan, but attention layers attend only over this
-    prompt's K/V — pre-existing cache entries are overwritten/ignored, so
-    continuation ("chunked") prefill is not yet supported for attn layers.
+    ``continuation=False`` (cold): requires a FRESHLY INITIALISED cache and
+    a LEFT-padded span starting at position 0; attention layers attend only
+    over this span's K/V.
+
+    ``continuation=True`` (warm): absorbs the span into an
+    *already-populated* cache at offset positions.  The span must be
+    RIGHT-padded (real tokens first) so the recurrent mixers' conv windows
+    cross from the cached context tail straight into the new tokens;
+    attention scatters the span K/V into the cache and attends over the
+    whole cache.  Recurrent mixers fold the carried state into the scan in
+    both modes — the flag only switches the attention read set and the
+    conv-tail extraction.
 
     MoE layers run the capacity-aware masked serving dispatch
-    (``moe.moe_prefill_block``): one dispatch group per position, padding
-    tokens masked out of routing and capacity, so prefill makes the same
-    routing decisions as S sequential ``decode_step`` calls and bucket
-    padding is bitwise-neutral.
+    (``moe.moe_prefill_block``) in both modes: one dispatch group per span
+    position (offset positions included — routing depends only on the
+    hidden states and the valid mask), padding tokens masked out of routing
+    and capacity, so prefill makes the same routing decisions as S
+    sequential ``decode_step`` calls and bucket padding is bitwise-neutral.
     """
     return _cached_pass(params, cfg, tokens, cache, positions, True,
-                        mesh, rules)
+                        mesh, rules, continuation=continuation)
+
+
+def grow_cache(cfg: ModelConfig, cache: list, batch: int, new_len: int
+               ) -> list:
+    """Extend every KV-cache leaf to ``new_len`` slots (new slots empty:
+    k/v zero, pos = -1).  Length-independent leaves (recurrent states, conv
+    tails, window-clamped ring buffers that don't change size) pass through
+    unchanged.  Used when a session outgrows the cache it was created with
+    (multi-turn continuation, warm serve() admission into longer slots).
+    ``new_len`` must be >= the current length."""
+    tmpl = init_cache(cfg, batch, new_len)
+
+    def one(t, c):
+        if t.shape == c.shape:
+            return c
+        return jax.lax.dynamic_update_slice(t, c.astype(t.dtype),
+                                            (0,) * c.ndim)
+
+    return jax.tree.map(one, tmpl, cache)
 
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: Array, cache: list,

@@ -139,15 +139,66 @@ def _generate_fused(params, cfg: ModelConfig, prompts, s_orig, rng,
                     ucfg: UncertaintyConfig, max_new: int, max_len: int,
                     greedy: bool, mesh=None, rules=None):
     """Whole generation — prefill, scanned decode and the Eq. 4 combine —
-    as ONE device call (nested jits trace inline)."""
+    as ONE device call (nested jits trace inline).
+
+    Returns (tokens, logits, u, h_mean, v_mean, carry): the raw Eq. 2-3
+    per-request means let callers re-average u over an extended generation,
+    and the decode-scan carry (cur, last, cache, pos, rng) is the warm
+    session state ``InferenceEngine.generate(..., return_state=True)``
+    hands out."""
     B = prompts.shape[0]
     cur, last, cache = _prefill_absorb(params, cfg, prompts, s_orig, max_len,
                                        mesh=mesh, rules=rules)
-    toks, lgs, h_per, v_per, _ = _decode_scan(
+    toks, lgs, h_per, v_per, carry = _decode_scan(
         params, cfg, cur, last, cache, jnp.broadcast_to(s_orig, (B,)), rng,
         ucfg, max_new, greedy, mesh=mesh, rules=rules)
-    u = U.combine_terms(h_per.mean(-1), v_per.mean(-1), ucfg)
-    return toks, lgs, u
+    h, v = h_per.mean(-1), v_per.mean(-1)
+    return toks, lgs, U.combine_terms(h, v, ucfg), h, v, carry
+
+
+@partial(jax.jit, static_argnames=("cfg", "mesh", "rules"))
+def _prefill_continue(params, cfg: ModelConfig, prompts, s_orig, start,
+                      cache, mesh=None, rules=None):
+    """Continuation prefill: absorb a new span into an already-populated
+    cache.  prompts (B, Sb) RIGHT-padded to a bucket (real tokens first, so
+    the recurrent conv windows cross from the cached context tail straight
+    into the span); s_orig = pre-bucket span length; start (B,) the
+    session's next absolute position.  Returns (first greedy token (B,),
+    its logits (B,V) f32, the updated cache).
+
+    On-mesh the incoming warm cache is re-pinned to its logical-axis
+    sharding before the span is spliced in, so a cache handed across jit
+    boundaries keeps the ``cache_axes`` placement of docs/SHARDING.md.
+    """
+    B, S = prompts.shape
+    col = jnp.arange(S, dtype=jnp.int32)[None]
+    # real columns at absolute positions start..start+s_orig-1; bucket
+    # padding keeps negative positions => inert in every mixer
+    positions = jnp.where(col < s_orig, start[:, None] + col, col - S)
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    logits, cache = T.prefill(params, cfg, prompts, cache, positions,
+                              continuation=True, mesh=mesh, rules=rules)
+    last = jax.lax.dynamic_slice_in_dim(logits, s_orig - 1, 1, axis=1)
+    last = last[:, 0].astype(jnp.float32)
+    last = sh.constrain(last, ("act_batch", "act_vocab"), mesh, rules)
+    cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return cur, last, cache
+
+
+@partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "greedy",
+                                   "mesh", "rules"))
+def _generate_continue(params, cfg: ModelConfig, prompts, s_orig, start,
+                       cache, rng, ucfg: UncertaintyConfig, max_new: int,
+                       greedy: bool, mesh=None, rules=None):
+    """Warm-path sibling of ``_generate_fused``: continuation prefill over a
+    live cache + scanned decode, one device call.  Same outputs."""
+    cur, last, cache = _prefill_continue(params, cfg, prompts, s_orig, start,
+                                         cache, mesh=mesh, rules=rules)
+    toks, lgs, h_per, v_per, carry = _decode_scan(
+        params, cfg, cur, last, cache, start + s_orig, rng,
+        ucfg, max_new, greedy, mesh=mesh, rules=rules)
+    h, v = h_per.mean(-1), v_per.mean(-1)
+    return toks, lgs, U.combine_terms(h, v, ucfg), h, v, carry
 
 
 @partial(jax.jit, static_argnames=("cfg", "greedy", "mesh", "rules"))
@@ -161,6 +212,54 @@ def _step(params, cfg: ModelConfig, tokens, cache, index, rng, greedy: bool,
     else:
         nxt = jax.random.categorical(rng, lg, axis=-1)
     return nxt.astype(jnp.int32), lg, cache
+
+
+@dataclasses.dataclass
+class SessionState:
+    """Warm cache handle: everything needed to continue a generation.
+
+    Returned by ``InferenceEngine.generate(..., return_state=True)`` and by
+    ``serve()`` for requests submitted with ``return_state=True``; accepted
+    back by ``generate(..., state=...)`` and by warm ``serve()`` admissions
+    (``Request.state``).  The handle is engine-specific — caches encode one
+    model's layer plan and dtypes — and single-use by convention: continuing
+    mutates nothing (JAX arrays are immutable) but the positions only make
+    sense along one timeline, so fork via ``state_select`` if needed.
+
+    * ``cache`` — layer-cache pytree (see ``transformer.init_cache``),
+      populated through position ``pos - 1``.  On-mesh it carries the
+      ``cache_axes`` shardings of docs/SHARDING.md.
+    * ``pos`` (B,) int32 — next absolute write position per row.
+    * ``cur`` (B,) int32 — the last sampled token, not yet absorbed or
+      emitted (the decode scan's pending token): pure decode extension
+      (``generate(None, k, state=...)``) resumes from it bitwise.
+    * ``last`` (B,V) f32 — ``cur``'s logits.
+    * ``max_len`` — static cache length (slots).
+    * ``offset`` — host-side upper bound of ``pos`` (static int), used to
+      size cache growth without a device sync.
+    * ``rng`` — the decode scan's carried PRNG key (None when unavailable,
+      e.g. serve()-extracted states whose sampling stream was shared
+      across slots).  Pure decode extension resumes from it, so sampled
+      (greedy=False) extension replays a longer generation bitwise too.
+    * ``exact`` — False when the handle was captured off a slot that kept
+      decoding past the request's stop token (mid-chunk retirement): the
+      KV entries up to ``pos`` are still exact, but the pending
+      ``cur``/``last`` and any recurrent-mixer state have absorbed
+      post-stop garbage steps.  Such a handle only supports continuation
+      prefill on attention-only models; anything else raises.
+    """
+    cache: Any
+    pos: Any
+    cur: Any
+    last: Any
+    max_len: int
+    offset: int
+    rng: Any = None
+    exact: bool = True
+
+    @property
+    def batch(self) -> int:
+        return int(self.pos.shape[0])
 
 
 @dataclasses.dataclass
@@ -186,6 +285,19 @@ class InferenceEngine:
 
     def __post_init__(self):
         self._mesh_jits: dict = {}
+        # host-side dispatch accounting: how many cold prefills, warm
+        # continuation prefills and decode-only resumes this engine issued
+        # (the gateway tests assert the probe's swarm round adds zero here)
+        self.counters = {"prefill": 0, "prefill_continue": 0,
+                         "decode_only": 0}
+        # warm continuation attends CHUNKED over the cache, which needs the
+        # cache length divisible by the KV block once it exceeds one block
+        # (cold prefill/decode never hit this: they chunk only the span)
+        kvb = self.cfg.attn_kv_block
+        if self.max_len > kvb and self.max_len % kvb:
+            self.max_len = -(-self.max_len // kvb) * kvb
+        self._recurrent = any(m in ("rglru", "ssd")
+                              for m, _ in self.cfg.layer_plan())
         if self.mesh is None:
             return
         self.rules = self.rules or sh.SERVE_RULES
@@ -217,23 +329,63 @@ class InferenceEngine:
         fn = self._mesh_jits.get(key)
         if fn is None:
             cfg, ucfg, mesh, rules = self.cfg, self.ucfg, self.mesh, self.rules
-            rep = NamedSharding(mesh, P())
 
             def body(params, prompts, s_orig, rng):
                 return _generate_fused(params, cfg, prompts, s_orig, rng,
                                        ucfg, max_new, max_len, greedy,
                                        mesh=mesh, rules=rules)
 
+            rep = NamedSharding(mesh, P())
             fn = jax.jit(
                 body,
                 in_shardings=(self._param_sh,
                               self._act_sh((B, Sb), ("act_batch", None)),
                               rep, rep),
-                out_shardings=(
-                    self._act_sh((B, max_new), ("act_batch", None)),
-                    self._act_sh((B, max_new, cfg.vocab_size),
-                                 ("act_batch", None, "act_vocab")),
-                    self._act_sh((B,), ("act_batch",))))
+                out_shardings=self._gen_out_sh(B, max_new, max_len))
+            self._mesh_jits[key] = fn
+        return fn
+
+    def _gen_out_sh(self, B: int, max_new: int, max_len: int):
+        """Output shardings shared by the fused cold and warm generate:
+        (tokens, logits, u, h_mean, v_mean, carry) with the decode-scan
+        carry — the session state — placed exactly like the decode chunk's
+        slot state (cache per ``cache_axes``, batch dims on 'data')."""
+        b_sh = self._act_sh((B,), ("act_batch",))
+        v_sh = self._act_sh((B, self.cfg.vocab_size),
+                            ("act_batch", "act_vocab"))
+        csh = self._cache_sh(
+            jax.eval_shape(lambda: T.init_cache(self.cfg, B, max_len)))
+        rep = NamedSharding(self.mesh, P())
+        return (self._act_sh((B, max_new), ("act_batch", None)),
+                self._act_sh((B, max_new, self.cfg.vocab_size),
+                             ("act_batch", None, "act_vocab")),
+                b_sh, b_sh, b_sh,
+                (b_sh, v_sh, csh, b_sh, rep))
+
+    def _cont_sharded(self, B: int, Sb: int, max_len: int, max_new: int,
+                      greedy: bool):
+        """jitted continuation prefill + decode with explicit in/out
+        shardings; the warm cache comes in already placed per cache_axes."""
+        key = ("cont", B, Sb, max_len, max_new, greedy)
+        fn = self._mesh_jits.get(key)
+        if fn is None:
+            cfg, ucfg, mesh, rules = self.cfg, self.ucfg, self.mesh, self.rules
+
+            def body(params, prompts, s_orig, start, cache, rng):
+                return _generate_continue(params, cfg, prompts, s_orig,
+                                          start, cache, rng, ucfg, max_new,
+                                          greedy, mesh=mesh, rules=rules)
+
+            rep = NamedSharding(mesh, P())
+            csh = self._cache_sh(
+                jax.eval_shape(lambda: T.init_cache(cfg, B, max_len)))
+            fn = jax.jit(
+                body,
+                in_shardings=(self._param_sh,
+                              self._act_sh((B, Sb), ("act_batch", None)),
+                              rep, self._act_sh((B,), ("act_batch",)),
+                              csh, rep),
+                out_shardings=self._gen_out_sh(B, max_new, max_len))
             self._mesh_jits[key] = fn
         return fn
 
@@ -267,11 +419,21 @@ class InferenceEngine:
         return fn
 
     # ------------------------------------------------------------------
+    def _round_len(self, need: int) -> int:
+        """Bucket a cache length: multiples of 64, and — because warm
+        continuation attends chunked over the *cache* — multiples of
+        ``attn_kv_block`` once the cache outgrows a single KV chunk."""
+        n = -(-need // 64) * 64
+        kvb = self.cfg.attn_kv_block
+        if n > kvb:
+            n = -(-n // kvb) * kvb
+        return n
+
     def _cache_len(self, s_bucket: int, max_new: int) -> int:
         need = s_bucket + max_new
         if need <= self.max_len:
             return self.max_len
-        return -(-need // 64) * 64          # bucket cache growth too
+        return self._round_len(need)        # bucket cache growth too
 
     def _bucket(self, prompts: np.ndarray) -> tuple[np.ndarray, int]:
         B, S = prompts.shape
@@ -283,19 +445,61 @@ class InferenceEngine:
         out[:, Sb - S:] = prompts
         return out, S
 
+    def _bucket_right(self, prompts: np.ndarray) -> tuple[np.ndarray, int]:
+        """Bucket a continuation span: RIGHT-padded, so no padding sits
+        between the cached context and the new tokens (the recurrent conv
+        windows must cross that boundary contiguously)."""
+        B, S = prompts.shape
+        gran = max(self.cfg.attn_q_block, self.cfg.attn_kv_block)
+        Sb = bucket_len(S, gran)
+        if Sb == S:
+            return prompts, S
+        out = np.zeros((B, Sb), np.int32)
+        out[:, :S] = prompts
+        return out, S
+
+    def _grown_cache(self, state: SessionState, need: int):
+        """(cache, max_len) with at least ``need`` slots, growing the
+        session's cache (empty new slots) when it is too short."""
+        if need <= state.max_len:
+            return state.cache, state.max_len
+        new_len = self._round_len(need)
+        cache = T.grow_cache(self.cfg, state.cache, state.batch, new_len)
+        if self.mesh is not None:
+            cache = jax.device_put(cache, self._cache_sh(cache))
+        return cache, new_len
+
     # ------------------------------------------------------------------
-    def generate(self, prompts: np.ndarray, max_new: int, *,
-                 greedy: bool = True, seed: int = 0) -> dict:
+    def generate(self, prompts: np.ndarray | None, max_new: int, *,
+                 greedy: bool = True, seed: int = 0,
+                 state: SessionState | None = None,
+                 return_state: bool = False) -> dict:
         """prompts (B, S) int32, LEFT-padded with PAD=0 (HF batched-decode
         convention, so the last absorbed position is always the prompt end).
 
         Jitted prefill + one scanned decode, fused into a single device
         call (SPMD-partitioned when the engine has a mesh).  Returns
         ``{"tokens": (B, max_new) int32, "u": (B,) Eq. 4 difficulty,
-        "logits": (B, max_new, V) f32, "prompt_lengths": (B,)}`` — the
-        probe's generation *is* the local answer (paper Sec. IV-A), and the
-        Eq. 2-3 entropy/variance terms are computed on the scanned logits
-        at zero extra forward passes.
+        "logits": (B, max_new, V) f32, "prompt_lengths": (B,),
+        "h_mean"/"v_mean": (B,) raw Eq. 2-3 means}`` — the probe's
+        generation *is* the local answer (paper Sec. IV-A), and the Eq. 2-3
+        entropy/variance terms are computed on the scanned logits at zero
+        extra forward passes.
+
+        Session API (docs/RUNTIME.md, "Continuation prefill & session
+        caches"):
+
+        * ``return_state=True`` adds ``"state"``: a :class:`SessionState`
+          warm-cache handle covering the prompt plus every emitted token.
+        * ``state=<handle>`` continues that session: ``prompts`` is only
+          the NEW span (turn t+1's user tokens), absorbed into the live
+          cache by one continuation prefill — the cached context is never
+          re-prefilled.  Greedy tokens are identical to cold-prefilling the
+          concatenation.
+        * ``state=<handle>`` with ``prompts=None`` is a pure decode
+          extension: resume from the session's pending token and emit
+          ``max_new`` more — bitwise the tokens a single longer generation
+          would have produced next (zero prefill dispatches of any kind).
 
         MoE configs take this fused path too: prefill routes each position
         as its own dispatch group with masked (capacity-excluded) bucket
@@ -303,24 +507,168 @@ class InferenceEngine:
         the same routing decisions the stepwise loop makes, so greedy
         tokens match ``generate_stepwise`` (docs/RUNTIME.md, MoE routing).
         """
+        rng = jax.random.PRNGKey(seed)
+        if prompts is not None:
+            prompts = np.asarray(prompts, np.int32)
+        if state is not None and (prompts is None or prompts.shape[1] == 0):
+            self._check_state(state, extension=True)
+            return self._extend(max_new, state, greedy, rng, return_state)
+        if state is not None:
+            self._check_state(state, extension=False)
+        B, S = prompts.shape
+        if state is None:
+            pb, s_orig = self._bucket(prompts)
+            max_len = self._cache_len(pb.shape[1], max_new)
+            self.counters["prefill"] += 1
+            if self.mesh is not None:
+                fn = self._fused_sharded(B, pb.shape[1], max_len,
+                                         int(max_new), bool(greedy))
+                out = fn(self.params, jnp.asarray(pb), jnp.int32(s_orig),
+                         rng)
+            else:
+                out = _generate_fused(
+                    self.params, self.cfg, jnp.asarray(pb),
+                    jnp.int32(s_orig), rng, self.ucfg, int(max_new),
+                    max_len, bool(greedy))
+            offset = s_orig + max_new
+        else:
+            if state.batch != B:
+                raise ValueError(f"state batch {state.batch} != prompt "
+                                 f"batch {B}")
+            pb, s_orig = self._bucket_right(prompts)
+            cache, max_len = self._grown_cache(
+                state, state.offset + pb.shape[1] + max_new)
+            self.counters["prefill_continue"] += 1
+            if self.mesh is not None:
+                fn = self._cont_sharded(B, pb.shape[1], max_len,
+                                        int(max_new), bool(greedy))
+                out = fn(self.params, jnp.asarray(pb), jnp.int32(s_orig),
+                         state.pos, cache, rng)
+            else:
+                out = _generate_continue(
+                    self.params, self.cfg, jnp.asarray(pb),
+                    jnp.int32(s_orig), state.pos, cache, rng, self.ucfg,
+                    int(max_new), bool(greedy))
+            offset = state.offset + s_orig + max_new
+        toks, lgs, u, h, v, carry = out
+        res = {"tokens": np.asarray(toks),
+               "u": np.asarray(u),
+               "logits": lgs,
+               "h_mean": np.asarray(h), "v_mean": np.asarray(v),
+               "prompt_lengths": (prompts != PAD).sum(axis=1)}
+        if return_state:
+            cur, last, cache, pos, crng = carry
+            res["state"] = SessionState(cache, pos, cur, last, max_len,
+                                        offset, rng=crng)
+        return res
+
+    def _check_state(self, state: SessionState, *, extension: bool):
+        """Refuse reuse an inexact handle can't support: one captured after
+        a mid-chunk stop retirement has a corrupted pending token and (for
+        recurrent mixers) a corrupted carried state — only continuation
+        prefill on an attention-only model survives that (the prefill
+        replaces cur/last and stale KV entries are masked/overwritten)."""
+        if state.exact:
+            return
+        if extension or self._recurrent:
+            raise ValueError(
+                "inexact session state (captured after a mid-chunk stop "
+                "retirement in serve()): "
+                + ("pure decode extension needs the pending token"
+                   if extension else
+                   "recurrent-mixer state absorbed post-stop steps")
+                + "; re-serve with max_new-aligned retirement or an "
+                  "attention-only model")
+
+    def absorb(self, prompts: np.ndarray, *,
+               state: SessionState | None = None) -> SessionState:
+        """Prefill-only: absorb a context into a (fresh or live) cache and
+        return the session handle — no decode steps run.
+
+        The returned state's pending token is the prefill argmax, so
+        ``generate(None, n, state=eng.absorb(p))`` emits exactly the greedy
+        tokens ``generate(p, n)`` would.  Use it to cache a shared context
+        (system prompt, conversation so far) once and fan generations out
+        of it; continuation over an absorb-only state is **bitwise**
+        identical to cold-prefilling the concatenation (no decode-written
+        K/V in between — see docs/RUNTIME.md on the numerics).
+        With ``state`` given, the new span is absorbed on top (prefill-only
+        multi-turn ingestion).
+        """
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
-        pb, s_orig = self._bucket(prompts)
-        max_len = self._cache_len(pb.shape[1], max_new)
-        if self.mesh is not None:
-            fn = self._fused_sharded(B, pb.shape[1], max_len, int(max_new),
-                                     bool(greedy))
-            toks, lgs, u = fn(self.params, jnp.asarray(pb),
-                              jnp.int32(s_orig), jax.random.PRNGKey(seed))
-        else:
-            toks, lgs, u = _generate_fused(
+        if state is None:
+            pb, s_orig = self._bucket(prompts)
+            max_len = self._cache_len(pb.shape[1], 0)
+            self.counters["prefill"] += 1
+            cur, last, cache = _prefill_absorb(
                 self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
-                jax.random.PRNGKey(seed), self.ucfg, int(max_new), max_len,
-                bool(greedy))
-        return {"tokens": np.asarray(toks),
-                "u": np.asarray(u),
-                "logits": lgs,
-                "prompt_lengths": (prompts != PAD).sum(axis=1)}
+                max_len, mesh=self.mesh, rules=self.rules)
+            pos, offset = jnp.full((B,), s_orig, jnp.int32), s_orig
+        else:
+            if state.batch != B:
+                raise ValueError(f"state batch {state.batch} != prompt "
+                                 f"batch {B}")
+            pb, s_orig = self._bucket_right(prompts)
+            cache, max_len = self._grown_cache(
+                state, state.offset + pb.shape[1])
+            self.counters["prefill_continue"] += 1
+            cur, last, cache = _prefill_continue(
+                self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
+                state.pos, cache, mesh=self.mesh, rules=self.rules)
+            pos, offset = state.pos + s_orig, state.offset + s_orig
+        return SessionState(cache, pos, cur, last, max_len, offset)
+
+    def _extend(self, max_new: int, state: SessionState, greedy: bool,
+                rng, return_state: bool) -> dict:
+        """Decode-only continuation: emit ``max_new`` more tokens from the
+        session's pending token — exactly the tokens a longer original
+        generation would have produced next (bitwise; the decode scan is
+        sequential, and the carried rng resumes the sampling stream, so
+        this holds for greedy AND sampled decode — states without a
+        carried rng, e.g. serve()-extracted ones, restart the stream from
+        ``seed`` and are bitwise for greedy only)."""
+        cache, max_len = self._grown_cache(state, state.offset + max_new)
+        self.counters["decode_only"] += 1
+        if state.rng is not None:
+            rng = state.rng
+        B = state.batch
+        if self.mesh is not None:
+            toks, h_per, v_per, carry = self._decode_sharded(
+                B, max_len, int(max_new), bool(greedy))(
+                    self.params, state.cur, state.last, cache, state.pos,
+                    rng)
+            lgs = None
+        else:
+            toks, lgs, h_per, v_per, carry = _decode_scan(
+                self.params, self.cfg, state.cur, state.last, cache,
+                state.pos, rng, self.ucfg, int(max_new), bool(greedy))
+        h, v = np.asarray(h_per).mean(-1), np.asarray(v_per).mean(-1)
+        res = {"tokens": np.asarray(toks),
+               "u": np.asarray(U.combine_terms(h, v, self.ucfg)),
+               "logits": lgs, "h_mean": h, "v_mean": v,
+               "prompt_lengths": np.zeros((B,), np.int64)}
+        if return_state:
+            cur, last, cache, pos, crng = carry
+            res["state"] = SessionState(cache, pos, cur, last, max_len,
+                                        state.offset + max_new, rng=crng)
+        return res
+
+    def state_select(self, state: SessionState, idx) -> SessionState:
+        """Slice a batched session handle down to rows ``idx`` (forking is
+        fine — leaves are immutable).  Used by the gateway to hand the
+        swarm round the probe's state for just the SWARM-routed queries."""
+        idx = jnp.asarray(np.asarray(idx, np.int32))
+        axes = self._slot_batch_axes(state.max_len)
+        cache = jax.tree.map(lambda s, ax: jnp.take(s, idx, axis=ax),
+                             state.cache, axes)
+        if self.mesh is not None:
+            cache = jax.device_put(cache, self._cache_sh(cache))
+        return SessionState(cache, jnp.take(state.pos, idx),
+                            jnp.take(state.cur, idx),
+                            jnp.take(state.last, idx, axis=0),
+                            state.max_len, state.offset,
+                            rng=state.rng, exact=state.exact)
 
     # ------------------------------------------------------------------
     def generate_stepwise(self, prompts: np.ndarray, max_new: int, *,
@@ -408,6 +756,21 @@ class InferenceEngine:
             self._slot_insert_fn = fn
         return fn
 
+    def _slot_extract(self):
+        """Jitted inverse of ``_slot_insert``: slice slot ``i`` out of the
+        slot cache as a batch-1 cache (a retiring request's session state)."""
+        fn = getattr(self, "_slot_extract_fn", None)
+        if fn is None:
+            axes = self._slot_batch_axes(self.max_len)
+
+            @jax.jit
+            def fn(slots, i):
+                return jax.tree.map(
+                    lambda s, ax: jax.lax.dynamic_slice_in_dim(s, i, 1, ax),
+                    slots, axes)
+            self._slot_extract_fn = fn
+        return fn
+
     def serve(self, requests: Sequence[Request] | None = None, *,
               batcher: ContinuousBatcher | None = None, n_slots: int = 4,
               decode_chunk: int = 8, stop_token: int | None = None,
@@ -427,6 +790,18 @@ class InferenceEngine:
         the decode chunk routes exactly per token, so neither other
         requests in flight nor garbage in empty slots can perturb a
         request's expert routing.
+
+        Session caches (docs/RUNTIME.md): a request with ``state`` set is
+        admitted by ONE continuation prefill of its (new-span) prompt over
+        the warm cache — the conversation so far is never re-absorbed.  A
+        request with ``return_state=True`` gets ``"state"`` in its result
+        dict, sliced out of the slot cache at retirement; the decode chunk
+        is clamped to such a request's remaining budget so its slot state
+        is captured exactly at its last step (a stop-token retirement
+        mid-chunk still yields an exact KV cache — stale higher-position
+        entries are masked and later overwritten — but the *recurrent*
+        state of RG-LRU/SSD mixers would have absorbed the chunk's
+        post-stop garbage steps; chunk-aligned retirement avoids that).
         """
         if (requests is None) == (batcher is None):
             raise ValueError("pass exactly one of requests / batcher")
@@ -445,8 +820,15 @@ class InferenceEngine:
         if not pending:
             return []
         gran = max(self.cfg.attn_q_block, self.cfg.attn_kv_block)
-        max_len = max(self._cache_len(bucket_len(len(r.prompt), gran),
-                                      r.max_new) for r in pending)
+
+        def _need(r: Request) -> int:
+            # warm requests need room for the session so far + the new span
+            off = r.state.offset if r.state is not None else 0
+            sb = bucket_len(len(r.prompt), gran) if r.prompt else 0
+            n = self._cache_len(off + sb, r.max_new)
+            return max(n, r.state.max_len) if r.state is not None else n
+
+        max_len = max(_need(r) for r in pending)
 
         cache = T.init_cache(self.cfg, n_slots, max_len)
         V = self.cfg.vocab_size
@@ -467,45 +849,85 @@ class InferenceEngine:
         insert = self._slot_insert()
 
         acc: dict[int, list] = {}       # rid -> [sum_h, sum_v, n]
+        states: dict[int, SessionState] = {}    # rid -> extracted state
+        pos0: dict[int, int] = {}       # slot -> position at admission
         results: list[dict] = []
+        extract = self._slot_extract()
 
         def drain():
             for req in batcher.drain_finished():
                 h, v, n = acc.pop(req.rid, (0.0, 0.0, 0))
                 d = max(n, 1)
-                results.append({"rid": req.rid,
-                                "tokens": np.asarray(req.generated, np.int32),
-                                "u": float(U.combine_terms(h / d, v / d,
-                                                           self.ucfg))})
+                out = {"rid": req.rid,
+                       "tokens": np.asarray(req.generated, np.int32),
+                       "u": float(U.combine_terms(h / d, v / d, self.ucfg))}
+                if req.rid in states:
+                    out["state"] = states.pop(req.rid)
+                results.append(out)
 
         while not batcher.idle:
             for i in batcher.admit():
                 req = batcher.slots[i]
-                p = np.asarray(req.prompt, np.int32)[None]
-                pb, s_orig = self._bucket(p)
-                c1, l1, k1 = _prefill_absorb(
-                    self.params, self.cfg, jnp.asarray(pb),
-                    jnp.int32(s_orig), max_len,
-                    mesh=self.mesh, rules=self.rules)
+                st = req.state
+                if st is not None:
+                    # warm admission: splice the session cache (grown to the
+                    # serve length) and continuation-prefill only the new
+                    # span — the conversation so far is NOT re-absorbed
+                    self._check_state(st, extension=not req.prompt)
+                    c1g, _ = self._grown_cache(st, max_len)
+                    if req.prompt:
+                        p = np.asarray(req.prompt, np.int32)[None]
+                        pb, s_orig = self._bucket_right(p)
+                        self.counters["prefill_continue"] += 1
+                        c1, l1, k1 = _prefill_continue(
+                            self.params, self.cfg, jnp.asarray(pb),
+                            jnp.int32(s_orig), st.pos, c1g,
+                            mesh=self.mesh, rules=self.rules)
+                        p0 = st.offset + s_orig
+                    else:                      # pure decode resume
+                        self.counters["decode_only"] += 1
+                        c1, l1, k1 = st.cur, st.last, c1g
+                        p0 = st.offset
+                else:
+                    p = np.asarray(req.prompt, np.int32)[None]
+                    pb, s_orig = self._bucket(p)
+                    self.counters["prefill"] += 1
+                    c1, l1, k1 = _prefill_absorb(
+                        self.params, self.cfg, jnp.asarray(pb),
+                        jnp.int32(s_orig), max_len,
+                        mesh=self.mesh, rules=self.rules)
+                    p0 = s_orig
                 cache = insert(cache, k1, i)
                 cur = cur.at[i].set(c1[0])
                 last = last.at[i].set(l1[0])
-                pos = pos.at[i].set(s_orig)
+                pos = pos.at[i].set(p0)
+                pos0[i] = p0
 
+            # clamp the chunk so a return_state request's last step lands on
+            # a chunk boundary — its slot state is then captured exactly.
+            # Each distinct clamped size jits its own decode scan, but only
+            # once per engine and only for sizes < decode_chunk that
+            # return_state requests actually hit near retirement (bounded
+            # by decode_chunk, not by the request mix).
+            chunk = min([int(decode_chunk)] +
+                        [r.max_new - len(r.generated)
+                         for _, r in batcher.active() if r.return_state])
             if self.mesh is not None:
                 toks, h_per, v_per, carry = self._decode_sharded(
-                    n_slots, max_len, int(decode_chunk), bool(greedy))(
+                    n_slots, max_len, chunk, bool(greedy))(
                         self.params, cur, last, cache, pos, rng)
             else:
                 toks, _, h_per, v_per, carry = _decode_scan(
                     self.params, self.cfg, cur, last, cache, pos, rng,
-                    self.ucfg, int(decode_chunk), bool(greedy),
+                    self.ucfg, chunk, bool(greedy),
                     with_logits=False)
             cur, last, cache, pos, rng = carry
             toks_np = np.asarray(toks)
             h_np, v_np = np.asarray(h_per), np.asarray(v_per)
 
-            for t in range(decode_chunk):
+            slot_of = {r.rid: i for i, r in batcher.active()}
+            retired_at: dict[int, int] = {}
+            for t in range(chunk):
                 active = batcher.active()
                 if not active:
                     break
@@ -515,6 +937,23 @@ class InferenceEngine:
                     a[1] += float(v_np[i, t])
                     a[2] += 1
                 batcher.record_tokens(toks_np[:, t], stop_token)
+                for i, req in active:
+                    if req.done:
+                        retired_at.setdefault(req.rid, t)
+            for req in batcher.finished:        # retired this chunk
+                i = slot_of.get(req.rid)
+                if not req.return_state or req.rid in states or i is None:
+                    continue
+                # a request whose last step is the chunk's last step (the
+                # clamp guarantees this for max_new retirement) is captured
+                # exactly; a stop-token retirement mid-chunk left the slot
+                # decoding garbage -> the handle is marked inexact and only
+                # supports continuation prefill on attention-only models
+                end = pos0[i] + len(req.generated)
+                states[req.rid] = SessionState(
+                    extract(cache, i), jnp.full((1,), end, jnp.int32),
+                    cur[i:i + 1], last[i:i + 1], max_len, end,
+                    exact=retired_at.get(req.rid) == chunk - 1)
             drain()
         drain()
         return results

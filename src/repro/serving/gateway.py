@@ -105,7 +105,11 @@ class Gateway:
                                     jnp.asarray(rp)))
 
         # --- probe = local answer + difficulty (Eq. 2-4) ---
-        probe_res = self.probe.generate(prompts, self.max_new, seed=seed)
+        # return_state hands back the probe's filled cache: the swarm round
+        # and any escalation deepening continue from it instead of paying
+        # the probe's prefill a second time
+        probe_res = self.probe.generate(prompts, self.max_new, seed=seed,
+                                        return_state=True)
         u = probe_res["u"]
         probe_lat = self.sim.edge_latency(plen + self.max_new)
 
@@ -134,14 +138,24 @@ class Gateway:
         consensus = np.full((B,), np.nan)
         swarm_mask = decision == SWARM
         if swarm_mask.any():
-            # the probe is usually a swarm member: reuse its generation
-            # instead of re-running it inside the round
-            pre = {j: (probe_res["tokens"][swarm_mask], u[swarm_mask])
+            # the probe is usually a swarm member: reuse its generation —
+            # tokens, answer-span difficulty AND the warm cache handle — so
+            # the round issues zero prefill dispatches for the probe member,
+            # and any escalation deepening extends decode-only from the
+            # live cache instead of re-prefilling the prompt
+            idx = np.where(swarm_mask)[0]
+            u_ans = self.swarm.member_u(self.probe, probe_res)
+            pre = {j: (probe_res["tokens"][swarm_mask], u_ans[swarm_mask],
+                       (probe_res["h_mean"][swarm_mask],
+                        probe_res["v_mean"][swarm_mask]))
                    for j, m in enumerate(self.swarm.members)
                    if m is self.probe}
+            states = {j: self.probe.state_select(probe_res["state"], idx)
+                      for j in pre}
             sw = self.swarm.collaborate(prompts[swarm_mask], self.max_new,
                                         member_mask=self.sim.member_up,
-                                        seed=seed, precomputed=pre)
+                                        seed=seed, precomputed=pre,
+                                        states=states)
             consensus[swarm_mask] = sw["consensus_score"]
             # Eq. 9 waits only on members that are actually up — down peers
             # must not contribute an edge-latency term (fault injection was
@@ -210,38 +224,53 @@ class Gateway:
 # ---------------------------------------------------------------------------
 
 def run_edge_only(queries, engine: InferenceEngine, sim: NetworkSimulator,
-                  max_new: int = 8, seed: int = 0) -> GatewayLog:
+                  max_new: int = 8, seed: int = 0,
+                  stop_token: int | None = None) -> GatewayLog:
+    """Edge-only baseline (Table III/IV row 1).
+
+    ``stop_token`` must be the same stop token the gateway's swarm uses so
+    the baseline is graded on *identically normalised* answers: the gateway
+    truncates every answer at the first stop token before clustering and
+    grading, and a baseline graded on raw tokens would count (or miss) gold
+    entities in the post-answer continuation — a different metric, not a
+    different architecture.
+    """
     prompts = pad_prompts([q["prompt"] for q in queries])
     plen = (prompts != 0).sum(axis=1)
     res = engine.generate(prompts, max_new, seed=seed)
+    answers = truncate_at_stop(res["tokens"], stop_token)
     lat = sim.edge_latency(plen + max_new)
-    correct = np.array([is_correct(res["tokens"][i], q.get("gold"))
+    correct = np.array([is_correct(answers[i], q.get("gold"))
                         for i, q in enumerate(queries)])
     B = len(queries)
     return GatewayLog(
         decision=np.full((B,), LOCAL), u=res["u"],
         safety=np.zeros((B,)), latency=lat, cost=np.zeros((B,)),
         prompt_len=plen, category=[q.get("category", "easy") for q in queries],
-        correct=correct, answers=res["tokens"],
+        correct=correct, answers=answers,
         consensus=np.full((B,), np.nan))
 
 
 def run_cloud_only(queries, cloud: InferenceEngine, sim: NetworkSimulator,
                    cost_params: cm.CostParams | None = None,
-                   max_new: int = 8, seed: int = 0) -> GatewayLog:
+                   max_new: int = 8, seed: int = 0,
+                   stop_token: int | None = None) -> GatewayLog:
+    """Cloud-only baseline — answers normalised exactly like the gateway's
+    (see ``run_edge_only`` on why grading raw tokens would skew Table IV)."""
     cost_params = cost_params or cm.CostParams()
     prompts = pad_prompts([q["prompt"] for q in queries])
     plen = (prompts != 0).sum(axis=1)
     res = cloud.generate(prompts, max_new, seed=seed)
+    answers = truncate_at_stop(res["tokens"], stop_token)
     lat = sim.cloud_latency(plen + max_new)
     cost = np.asarray(cm.cost_cloud(jnp.asarray(plen, jnp.float32),
                                     float(max_new), cost_params))
-    correct = np.array([is_correct(res["tokens"][i], q.get("gold"))
+    correct = np.array([is_correct(answers[i], q.get("gold"))
                         for i, q in enumerate(queries)])
     B = len(queries)
     return GatewayLog(
         decision=np.full((B,), CLOUD), u=res["u"],
         safety=np.zeros((B,)), latency=lat, cost=cost,
         prompt_len=plen, category=[q.get("category", "easy") for q in queries],
-        correct=correct, answers=res["tokens"],
+        correct=correct, answers=answers,
         consensus=np.full((B,), np.nan))

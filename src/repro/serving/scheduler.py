@@ -41,10 +41,16 @@ def select_peers(pred_latency: np.ndarray, k: int, l_max: float,
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: list
-    max_new: int
+    prompt: list                 # new-span tokens (the WHOLE prompt when
+    max_new: int                 # state is None; only the new turn with one)
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # warm-cache session handle (serving/engine.py::SessionState): admission
+    # splices the live cache into the slot and continuation-prefills only
+    # ``prompt`` instead of re-absorbing the whole conversation
+    state: object | None = None
+    # hand back this request's SessionState at retirement (multi-turn serve)
+    return_state: bool = False
 
 
 class ContinuousBatcher:

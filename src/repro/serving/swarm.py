@@ -15,6 +15,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import uncertainty as U
 from repro.core.consensus import PAD, batched_consensus
 from repro.serving.engine import InferenceEngine
 from repro.serving.scheduler import Request
@@ -50,6 +51,19 @@ def truncate_at_stop(tokens: np.ndarray, stop_token: int | None) -> np.ndarray:
     return out
 
 
+def answer_mask(tokens: np.ndarray, stop_token: int | None) -> np.ndarray:
+    """Bool mask of the *answer* span: positions up to and INCLUDING the
+    first stop token (everything a request would have decoded before
+    retiring).  Eq. 2-4 difficulty restricted to this span matches the
+    streaming serve path's accumulation — post-answer entropy is not
+    folded into u."""
+    if stop_token is None:
+        return np.ones(tokens.shape, bool)
+    eq = tokens == stop_token
+    hit = np.cumsum(eq, axis=-1)
+    return (hit == 0) | ((hit == 1) & eq)
+
+
 @dataclasses.dataclass
 class SwarmExecutor:
     members: list[InferenceEngine]
@@ -61,7 +75,8 @@ class SwarmExecutor:
     def collaborate(self, prompts: np.ndarray, max_new: int, *,
                     member_mask: np.ndarray | None = None,
                     seed: int = 0,
-                    precomputed: dict[int, tuple] | None = None) -> dict:
+                    precomputed: dict[int, tuple] | None = None,
+                    states: dict[int, object] | None = None) -> dict:
         """prompts (B, S). member_mask (n,) bool marks *available* members
         (node-failure injection / quorum selection excludes the rest).
 
@@ -69,9 +84,21 @@ class SwarmExecutor:
         (jitted prefill + scanned decode).  ``streaming=True`` instead feeds
         the round through the member's continuous-batching ``serve`` path —
         same greedy tokens, but sized for requests that arrive over time,
-        not for a round that is known upfront.  ``precomputed`` maps member
-        index -> (tokens (B, N), u (B,)) for members whose generations the
-        caller already has (the gateway's probe), so they are not re-run.
+        not for a round that is known upfront.  Requests retire at
+        ``stop_token``, so streamed and batched rounds agree on answers
+        AND on u: the batched path masks its Eq. 2-4 difficulty to the
+        answer span (up to and including the stop token — ``answer_mask``),
+        matching what the streaming path accumulates before retirement.
+
+        ``precomputed`` maps member index -> (tokens (B, N), u (B,)[,
+        (h_mean, v_mean)]) for members whose generations the caller already
+        has (the gateway's probe), so they are not re-run — the round
+        issues ZERO prefill dispatches for them.  ``states`` maps member
+        index -> the matching ``SessionState`` warm-cache handle; when the
+        round wants a longer answer than the precomputed one (escalation
+        deepening), the member *extends* its generation decode-only from
+        the live cache instead of re-prefilling the prompt, and u is
+        re-averaged over the full span from the provided raw Eq. 2-3 means.
 
         Returns ``{"answers": (B, n, N) per-member tokens, "u": (B, n)
         Eq. 4 difficulties, "winner_tokens": (B, N), "winner_member":
@@ -89,14 +116,32 @@ class SwarmExecutor:
             if not member_mask[j]:
                 continue
             if precomputed is not None and j in precomputed:
-                toks, uj = precomputed[j]
+                toks, uj = precomputed[j][0], precomputed[j][1]
+                toks = np.asarray(toks, np.int32)
+                n_pre = toks.shape[1]
+                if n_pre < max_new:
+                    if states is None or j not in states:
+                        raise ValueError(
+                            f"member {j}: precomputed answer covers {n_pre}"
+                            f" < {max_new} tokens and no session state was"
+                            " provided to extend it from")
+                    # decode-only continuation off the warm cache: the
+                    # extension emits exactly the tokens a longer original
+                    # generation would have produced next — zero prefills
+                    ext = eng.generate(None, max_new - n_pre,
+                                       state=states[j], seed=seed + j)
+                    pre_toks = toks
+                    toks = np.concatenate([toks, ext["tokens"]], axis=1)
+                    if len(precomputed[j]) > 2:
+                        uj = self._deepened_u(eng, pre_toks, ext,
+                                              precomputed[j][2], uj)
             elif self.streaming:
                 # the padded row (incl. leading PADs) is the request prompt,
                 # so per-request absorption matches batched generation
                 reqs = [Request(rid=i, prompt=prompts[i].tolist(),
                                 max_new=max_new) for i in range(B)]
                 fin = eng.serve(reqs, n_slots=min(B, self.serve_slots),
-                                seed=seed + j)
+                                stop_token=self.stop_token, seed=seed + j)
                 toks = np.zeros((B, max_new), np.int32)
                 uj = np.ones((B,), np.float32)
                 for r in fin:
@@ -104,7 +149,10 @@ class SwarmExecutor:
                     uj[r["rid"]] = r["u"]
             else:
                 res = eng.generate(prompts, max_new, seed=seed + j)
-                toks, uj = res["tokens"], res["u"]
+                toks = res["tokens"]
+                # mask u to the answer span so batched and streaming
+                # rounds score identically (no post-answer entropy)
+                uj = self.member_u(eng, res)
             answers[:, j, :] = truncate_at_stop(np.asarray(toks, np.int32),
                                                 self.stop_token)
             u[:, j] = uj
@@ -124,3 +172,52 @@ class SwarmExecutor:
             "consensus_score": np.asarray(res.best_score),  # (B,)
             "scores": np.asarray(res.scores),         # (B, n)
         }
+
+    def _deepened_u(self, eng: InferenceEngine, pre_toks: np.ndarray,
+                    ext: dict, pre_terms: tuple,
+                    uj: np.ndarray) -> np.ndarray:
+        """u for a member whose precomputed answer was extended decode-only.
+
+        Scored over the same answer span ``member_u`` uses for everyone
+        else: with no stop token, the caller's raw Eq. 2-3 means re-average
+        over the full span; with one, extension terms are masked to the
+        answer and rows whose answer already ended inside the prefix keep
+        the caller's (answer-span) u untouched.
+        """
+        h1, v1 = pre_terms
+        n_pre = pre_toks.shape[1]
+        k = ext["tokens"].shape[1]
+        if self.stop_token is None:
+            h = (h1 * n_pre + ext["h_mean"] * k) / (n_pre + k)
+            v = (v1 * n_pre + ext["v_mean"] * k) / (n_pre + k)
+            return np.asarray(U.combine_terms(h, v, eng.ucfg))
+        if ext.get("logits") is None:
+            return uj            # can't mask the extension terms: keep the
+                                 # caller's answer-span u (conservative)
+        full_mask = answer_mask(
+            np.concatenate([pre_toks, ext["tokens"]], axis=1),
+            self.stop_token)
+        prefix_clean = full_mask[:, :n_pre].all(axis=1)
+        ext_mask = full_mask[:, n_pre:]
+        h2, v2 = U.uncertainty_terms(ext["logits"],
+                                     jnp.asarray(ext["tokens"]), eng.ucfg)
+        n2 = ext_mask.sum(axis=1)
+        d = n_pre + n2
+        h = (h1 * n_pre + (np.asarray(h2) * ext_mask).sum(axis=1)) / d
+        v = (v1 * n_pre + (np.asarray(v2) * ext_mask).sum(axis=1)) / d
+        return np.where(prefix_clean,
+                        np.asarray(U.combine_terms(h, v, eng.ucfg)), uj)
+
+    def member_u(self, eng: InferenceEngine, res: dict) -> np.ndarray:
+        """Eq. 2-4 difficulty of a member generation restricted to the
+        answer span (``answer_mask``).  This is the u the streaming serve
+        path reports — a request retires at the stop token, so its
+        accumulated terms never include post-answer steps — and the
+        batched path must score the same way for the two to agree."""
+        if self.stop_token is None or res.get("logits") is None:
+            return res["u"]
+        mask = answer_mask(np.asarray(res["tokens"], np.int32),
+                           self.stop_token)
+        return np.asarray(U.difficulty(res["logits"],
+                                       jnp.asarray(res["tokens"]),
+                                       eng.ucfg, mask=jnp.asarray(mask)))

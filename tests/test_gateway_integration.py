@@ -92,6 +92,29 @@ def test_quorum_reduces_swarm_tail_latency(system):
     assert q2.mean() < full.mean()
 
 
+def test_swarm_round_issues_zero_probe_prefill_dispatches(system):
+    """Probe-cache reuse acceptance: one answer_batch call must prefill the
+    probe exactly ONCE (its own probe pass) — the swarm round reuses the
+    probe's answer and warm cache handle instead of re-prefilling, even
+    when every query is forced onto the swarm path."""
+    import dataclasses as dc
+
+    gw, probe, _, world = system
+    gw = _fresh_sim(gw)
+    old_cfg = gw.router_cfg
+    # force every non-safety query into the Level-1 swarm round
+    gw.router_cfg = dc.replace(old_cfg, tau_low=-1.0, tau_high=2.0)
+    try:
+        before = dict(probe.counters)
+        log = gw.answer_batch(world.study_workload(4, 4, 0))
+    finally:
+        gw.router_cfg = old_cfg
+    assert (log.decision == SWARM).any()
+    assert probe.counters["prefill"] == before["prefill"] + 1
+    assert probe.counters["prefill_continue"] == before["prefill_continue"]
+    assert probe.counters["decode_only"] == before["decode_only"]
+
+
 def test_distill_buffer_collects_cloud_queries(system):
     gw, _, _, world = system
     gw = _fresh_sim(gw)

@@ -83,10 +83,10 @@ class TestFusedMoEParity:
         prompts = pad_prompts(PROMPTS)      # S=5 -> bucket 8 inside generate
         B, S = prompts.shape
         res = engine.generate(prompts, 6)
-        toks, lgs, _ = E._generate_fused(
+        toks, lgs = E._generate_fused(
             engine.params, engine.cfg, jnp.asarray(prompts), jnp.int32(S),
             jax.random.PRNGKey(0), engine.ucfg, 6,
-            engine._cache_len(E.bucket_len(S), 6), True)
+            engine._cache_len(E.bucket_len(S), 6), True)[:2]
         np.testing.assert_array_equal(res["tokens"], np.asarray(toks))
         np.testing.assert_array_equal(np.asarray(res["logits"]),
                                       np.asarray(lgs))
