@@ -173,6 +173,50 @@ def bench_all() -> list[tuple[str, float, float]]:
     rows.append(("swarm_reprefill_vs_reuse", us_ru,
                  round(us_re / us_ru, 2)))
 
+    # paged block-pool cache vs monolithic (ISSUE 5 tentpole).  Two rows:
+    #   * paged_vs_monolithic_decode — pure decode-only extension over a
+    #     warm session, paged tables vs monolithic buffers (the pool adds a
+    #     per-step block gather; CI enforces <= 5% regression);
+    #   * prefix_share_fanout — 8 sessions over one 448-token system
+    #     prompt: COW block-table fan-out (ONE prefill) vs cold per-slot
+    #     prefill of the same context (CI enforces the >= 2x floor; long
+    #     shared prefixes are the regime prefix sharing targets — the
+    #     per-slot prefill is the marginal cost it deletes).
+    eng_pg = InferenceEngine("bench-paged", cfg_m, params, max_len=64,
+                             paged=True, block_len=32, pool_blocks=512)
+    st_mono = eng.absorb(ctx)
+    st_pg = eng_pg.absorb(ctx)
+
+    def _dec_mono():
+        return eng.generate(None, 16, state=st_mono)["tokens"]
+
+    def _dec_paged():
+        return eng_pg.generate(None, 16, state=st_pg)["tokens"]
+    us_dm = _time(_dec_mono, iters=20, warmup=3)
+    us_dp = _time(_dec_paged, iters=20, warmup=3)
+    rows.append(("decode_extend_monolithic_b4_n16", us_dm, 4))
+    rows.append(("decode_extend_paged_b4_n16", us_dp, 4))
+    rows.append(("paged_vs_monolithic_decode", us_dp,
+                 round(us_dm / us_dp, 3)))
+
+    sys_prompt = rngp.randint(7, cfg_m.vocab_size,
+                              size=(1, 448)).astype(np.int32)
+
+    def _fan_shared():
+        st = eng_pg.absorb(sys_prompt)
+        fan = eng_pg.fanout(st, 8)
+        out = eng_pg.generate(None, 8, state=fan)["tokens"]
+        eng_pg.release(fan); eng_pg.release(st)
+        return out
+
+    def _fan_cold():
+        return eng.generate(np.tile(sys_prompt, (8, 1)), 8)["tokens"]
+    us_fs = _time(_fan_shared, iters=5, warmup=1)
+    us_fc = _time(_fan_cold, iters=5, warmup=1)
+    rows.append(("prefix_fanout8_shared_blocks_s448", us_fs, 8))
+    rows.append(("prefix_fanout8_cold_prefill_s448", us_fc, 8))
+    rows.append(("prefix_share_fanout", us_fs, round(us_fc / us_fs, 2)))
+
     # mesh-sharded decode vs single-device (same B=4/S=32/max_new=8 smoke).
     # The serving mesh spans whatever devices are live: on a 1-device
     # container it is the degenerate (1, 1) mesh and the ratio measures the

@@ -106,6 +106,12 @@ ACT_RULES: dict[str, Chain] = {
     "act_kv_seq": _chain("model"),               # KV-cache seq: fallback TP
     # dim when kv_heads doesn't divide the model axis (Pope et al.-style
     # sequence-sharded cache; softmax partials all-reduce over 'model')
+    # paged cache pool (docs/SHARDING.md "paged pool & block tables"): the
+    # block/state-row dim of the per-layer pools shards over 'data' like a
+    # batch dim — the allocator hands out contiguous slot-major runs, so a
+    # slot's blocks land on few 'data' shards; tables/row-ids ride with
+    # act_batch and the block_len dim inside a block stays unsharded.
+    "act_pool": _chain(("pod", "data"), "data"),
 }
 
 # Dims with lower numbers claim mesh axes first (a KV cache lists seq before
@@ -114,7 +120,7 @@ AXIS_PRIORITY = {
     "act_kv_heads": 0, "act_heads": 0, "heads": 0, "kv_heads": 0,
     "ffn": 0, "experts": 0, "vocab": 0, "act_vocab": 0, "act_ffn": 0,
     "act_experts": 0, "ssm_inner": 0, "act_ssm_inner": 0,
-    "act_batch": 0, "embed": 1,
+    "act_batch": 0, "act_pool": 0, "embed": 1,
     "act_kv_seq": 2,
 }
 

@@ -60,6 +60,70 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, idx_ref, o_ref,
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, idx_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, bt: int, nt: int,
+                         window: int | None, scale: float):
+    """Same streaming-softmax body as ``_decode_kernel`` — the block table
+    only changes WHERE each KV tile comes from (the BlockSpec index maps
+    read ``tbl_ref``), not the math.  ``tbl_ref`` is scalar-prefetched so
+    the DMA addresses are known before the body runs."""
+    del tbl_ref
+    _decode_kernel(q_ref, k_ref, v_ref, pos_ref, idx_ref, o_ref,
+                   m_ref, l_ref, acc_ref, bt=bt, nt=nt, window=window,
+                   scale=scale)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array, pos_pool: jax.Array,
+                                  table: jax.Array, index: jax.Array, *,
+                                  window: int | None = None,
+                                  interpret: bool = True) -> jax.Array:
+    """Paged-cache decode attention: the KV cache lives in a block pool
+    (``k_pool``/``v_pool`` (N, L, K, D), ``pos_pool`` (N, L)) and each
+    batch row reads it through a block table (B, nb) of pool block ids.
+
+    The grid iterates (B, K, nb) with the cache-block dim innermost, and
+    the k/v/pos BlockSpec index maps dereference the scalar-prefetched
+    table — ``table[b, t]`` picks the pool block to DMA — so the kernel
+    streams exactly the slot's blocks through VMEM once per (batch,
+    kv-head) pair, never materialising the gathered linear view the XLA
+    path (``models.attention.paged_view``) builds.  Empty/invalid entries
+    are masked by the pooled positions (pos = -1), identical to the
+    monolithic kernel.
+    """
+    B, K, G, D = q.shape
+    N, L = k_pool.shape[0], k_pool.shape[1]
+    nb = table.shape[1]
+    grid = (B, K, nb)
+    kern = functools.partial(_paged_decode_kernel, bt=L, nt=nb,
+                             window=window, scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,            # the block table
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, L, 1, D),
+                         lambda b, h, t, tbl: (tbl[b, t], 0, h, 0)),
+            pl.BlockSpec((1, L, 1, D),
+                         lambda b, h, t, tbl: (tbl[b, t], 0, h, 0)),
+            pl.BlockSpec((1, L), lambda b, h, t, tbl: (tbl[b, t], 0)),
+            pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(table, q.reshape(B, K, G, D), k_pool, v_pool, pos_pool, index)
+
+
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             pos: jax.Array, index: jax.Array, *,
                             window: int | None = None, bt: int = 512,

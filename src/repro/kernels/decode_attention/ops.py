@@ -18,3 +18,17 @@ def decode_attention(q, k, v, pos, index, *, window=None, bt=512,
             q, k, v, pos, index, window=window, bt=bt,
             interpret=jax.default_backend() != "tpu")
     return R.decode_attention_ref(q, k, v, pos, index, window=window)
+
+
+@partial(jax.jit, static_argnames=("window", "force_pallas"))
+def paged_decode_attention(q, k_pool, v_pool, pos_pool, table, index, *,
+                           window=None, force_pallas=False):
+    """Block-table decode attention over a paged KV pool: the TPU kernel
+    DMAs the slot's pool blocks through the scalar-prefetched table; the
+    oracle gathers the linear view and reuses the monolithic reference."""
+    if jax.default_backend() == "tpu" or force_pallas:
+        return K.paged_decode_attention_pallas(
+            q, k_pool, v_pool, pos_pool, table, index, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return R.paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table,
+                                        index, window=window)

@@ -18,3 +18,20 @@ def decode_attention_ref(q, k, v, pos, index, *, window=None):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table, index, *,
+                               window=None):
+    """Block-table oracle: gather the slot-linear view of the pool
+    (k_pool/v_pool (N,L,K,D), pos_pool (N,L), table (B,nb)) and run the
+    monolithic reference over it — the same view the serving path's
+    ``models.attention.paged_view`` assembles."""
+    B, nb = table.shape
+    L = k_pool.shape[1]
+    flat = table.reshape(-1)
+    k = jnp.take(k_pool, flat, axis=0, mode="clip").reshape(
+        B, nb * L, *k_pool.shape[2:])
+    v = jnp.take(v_pool, flat, axis=0, mode="clip").reshape(
+        B, nb * L, *v_pool.shape[2:])
+    pos = jnp.take(pos_pool, flat, axis=0, mode="clip").reshape(B, nb * L)
+    return decode_attention_ref(q, k, v, pos, index, window=window)

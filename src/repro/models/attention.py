@@ -275,6 +275,31 @@ def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
     return x + y, cache
 
 
+def _decode_attend(q: Array, k_lin: Array, v_lin: Array, pos_lin: Array,
+                   index: Array, cfg: ModelConfig, local: bool,
+                   mesh, rules) -> Array:
+    """One query token against a slot-linear (B,T) K/V view — shared by the
+    monolithic cache and the gathered paged view, so the two layouts cannot
+    diverge numerically (paged == monolithic is bitwise by construction
+    when the views are elementwise equal)."""
+    B = q.shape[0]
+    G = cfg.num_heads // cfg.num_kv_heads
+    qr = q.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
+    # bf16 operands + f32 accumulation: never materialise an f32 cache copy
+    s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(cfg.comp_dtype), k_lin,
+                   preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
+    mask = (pos_lin <= index[:, None]) & (pos_lin >= 0)
+    if local and cfg.window is not None:
+        mask &= index[:, None] - pos_lin < cfg.window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cfg.comp_dtype), v_lin,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    return constrain(out, ("act_batch", None, "act_heads", "act_head_dim"),
+                     mesh, rules)
+
+
 def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
                 cfg: ModelConfig, *, local: bool, mesh=None, rules=None
                 ) -> tuple[Array, KVCache]:
@@ -299,20 +324,85 @@ def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
                     kv_axes, mesh, rules),
         pos=cache.pos.at[b, slot].set(index.astype(jnp.int32)),
     )
-    G = cfg.num_heads // cfg.num_kv_heads
-    qr = q.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
-    # bf16 operands + f32 accumulation: never materialise an f32 cache copy
-    s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(cfg.comp_dtype), cache.k,
-                   preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
-    mask = (cache.pos <= index[:, None]) & (cache.pos >= 0)
-    if local and cfg.window is not None:
-        mask &= index[:, None] - cache.pos < cfg.window
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cfg.comp_dtype), cache.v,
-                     preferred_element_type=jnp.float32)
-    out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim).astype(x.dtype)
-    out = constrain(out, ("act_batch", None, "act_heads", "act_head_dim"),
-                    mesh, rules)
+    out = _decode_attend(q, cache.k, cache.v, cache.pos, index, cfg, local,
+                         mesh, rules).astype(x.dtype)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-pool) variants: pool-shaped KVCache + per-slot block tables
+# ---------------------------------------------------------------------------
+
+PAGED_KV_AXES = ("act_pool", None, "act_kv_heads", None)
+
+
+def init_paged_kv(cfg: ModelConfig, n_blocks: int, block_len: int) -> KVCache:
+    """Pool-shaped KV storage: k/v ``(n_blocks, block_len, K, Dh)``, pos
+    ``(n_blocks, block_len)`` (-1 = empty).  Local-window layers share the
+    same geometry — the window clamp happens at view time through the table
+    slice, not in storage."""
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((n_blocks, block_len, K, Dh), cfg.dtype),
+        v=jnp.zeros((n_blocks, block_len, K, Dh), cfg.dtype),
+        pos=jnp.full((n_blocks, block_len), -1, jnp.int32),
+    )
+
+
+def paged_view(pool: KVCache, table: Array) -> KVCache:
+    """Gather a slot-linear ``(B, nb*L, ...)`` view of the pool through the
+    block table.  With the same writes applied, the view is elementwise
+    equal to the monolithic cache of length nb*L — which is what makes the
+    whole paged serving path bitwise-identical to the monolithic one.
+    Sentinel (out-of-range) table entries clip to the last pool block:
+    garbage reads that only ever feed an empty serve slot's own row."""
+    B, nb = table.shape
+    L = pool.k.shape[1]
+    flat = table.reshape(-1)
+    k = jnp.take(pool.k, flat, axis=0, mode="clip")
+    v = jnp.take(pool.v, flat, axis=0, mode="clip")
+    pos = jnp.take(pool.pos, flat, axis=0, mode="clip")
+    return KVCache(k=k.reshape(B, nb * L, *pool.k.shape[2:]),
+                   v=v.reshape(B, nb * L, *pool.v.shape[2:]),
+                   pos=pos.reshape(B, nb * L))
+
+
+def paged_scatter_blocks(pool: KVCache, table: Array, lin: KVCache,
+                         lo: Array, hi: Array, *,
+                         window: int | None = None) -> KVCache:
+    """Write the blocks covering position range [lo, hi) of a slot-linear
+    cache back into the pool through the table.
+
+    ``lin`` is the (B, T) linear cache the monolithic compute produced off
+    a ``paged_view`` gather; ``lo``/``hi`` (B,) bound the positions that
+    dispatch wrote (prefill span, decode steps).  Only the covering blocks
+    are scattered — O(tokens written), and a refcount-shared prefix block
+    (always below ``lo``) is NEVER written through, which is the paged
+    allocator's copy-on-write invariant.  ``window`` set = ring-buffer
+    layer: the write range is mapped to ring slots (with wrap).  Sentinel
+    (out-of-range) table entries drop, so empty serve slots scatter
+    nothing."""
+    N, L = pool.k.shape[0], pool.k.shape[1]
+    B, T = lin.pos.shape
+    nb = T // L
+    tbl = table[:, :nb]
+    jpos = jnp.arange(nb, dtype=jnp.int32)[None] * L        # block starts
+    if window is None:
+        touched = (jpos < hi[:, None]) & (jpos + L > lo[:, None])
+    else:
+        span = hi - lo
+        s0 = lo % T
+        s1 = s0 + jnp.minimum(span, T)
+        touched = (((jpos < s1[:, None]) & (jpos + L > s0[:, None]))
+                   | ((jpos + T < s1[:, None])
+                      & (jpos + T + L > s0[:, None])))     # ring wrap
+    dst = jnp.where(touched, tbl, N).reshape(-1)            # (B*nb,)
+    kb = lin.k.reshape(B * nb, L, *lin.k.shape[2:])
+    vb = lin.v.reshape(B * nb, L, *lin.v.shape[2:])
+    pb = lin.pos.reshape(B * nb, L)
+    return KVCache(
+        k=pool.k.at[dst].set(kb.astype(pool.k.dtype), mode="drop"),
+        v=pool.v.at[dst].set(vb.astype(pool.v.dtype), mode="drop"),
+        pos=pool.pos.at[dst].set(pb, mode="drop"),
+    )

@@ -262,7 +262,10 @@ def _cached_block(bp: dict, x: Array, cache: LayerCache, posarg: Array,
                   continuation: bool = False) -> tuple[Array, LayerCache]:
     """One block with cache update — shared by prefill (posarg = positions
     (B,S)) and decode (posarg = index (B,)), so both paths always run the
-    same block structure."""
+    same block structure.  Paged caches never reach this level: the engine
+    gathers their slot-linear view first (``paged_gather``) and runs this
+    exact monolithic body on it, which is what makes paged serving bitwise-
+    identical by construction."""
     mixer, f = kind
     if mixer in ("attn", "attn_local"):
         if is_prefill:
@@ -326,7 +329,7 @@ def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
 
     from repro.distributed.sharding import DEFAULT_RULES, spec_for
     rules = rules or DEFAULT_RULES
-    axes = cache_axes(cfg)
+    axes = paged_cache_axes(cfg) if is_paged(cache) else cache_axes(cfg)
 
     def one(leaf, ax):
         spec = spec_for(leaf.shape, ax, mesh, rules.act_rules)
@@ -336,6 +339,18 @@ def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
     # cache leaves are arrays; flatten_up_to leaves the parallel logical-axis
     # tuples of ``cache_axes`` intact as the second argument
     return jax.tree.map(one, cache, axes)
+
+
+def is_paged(cache) -> bool:
+    """True for the paged cache pytree ``{"layers", "table", "rows"}``."""
+    return isinstance(cache, dict)
+
+
+def paged_cache(layers: list, table: Array, rows: Array) -> dict:
+    """Assemble the paged cache pytree the serving phases thread through
+    jit: the engine-wide pool arrays + this dispatch's block tables and
+    state-row ids (see serving/cache_manager.py)."""
+    return {"layers": layers, "table": table, "rows": rows}
 
 
 def _cached_pass(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
@@ -421,6 +436,228 @@ def grow_cache(cfg: ModelConfig, cache: list, batch: int, new_len: int
                                             (0,) * c.ndim)
 
     return jax.tree.map(one, tmpl, cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged block pool (serving/cache_manager.py owns the allocator)
+# ---------------------------------------------------------------------------
+
+def init_block_pool(cfg: ModelConfig, n_blocks: int, block_len: int,
+                    n_rows: int) -> list:
+    """Pool arrays for the paged cache, structure parallel to
+    ``init_cache``: attention layers hold ``(n_blocks, block_len, ...)`` KV
+    blocks, recurrent/conv layers hold ``(n_rows, ...)`` state rows (the
+    same leaves as a batch-``n_rows`` monolithic state — rows are just
+    pooled batch slots addressed by id)."""
+    pools = []
+    for stage in cfg.stage_plan():
+        sc = {}
+        for i, (mixer, _) in enumerate(stage.blocks):
+            if mixer in ("attn", "attn_local"):
+                c = LayerCache(kv=attention.init_paged_kv(
+                    cfg, n_blocks, block_len))
+            elif mixer == "rglru":
+                c = LayerCache(rg=rglru.init_rglru_state(cfg, n_rows))
+            elif mixer == "ssd":
+                c = LayerCache(ssd=ssm.init_ssm_state(cfg, n_rows))
+            if stage.repeat > 1:
+                c = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (stage.repeat,) + a.shape), c)
+            sc[f"b{i}"] = c
+        pools.append(sc)
+    return pools
+
+
+def paged_cache_axes(cfg: ModelConfig) -> dict:
+    """Logical-axis tree parallel to ``paged_cache(init_block_pool(...))``:
+    the pool block/row dim shards over 'data' (``act_pool`` rule), block
+    tables and row ids ride with the batch."""
+    kv = attention.KVCache(k=attention.PAGED_KV_AXES,
+                           v=attention.PAGED_KV_AXES,
+                           pos=("act_pool", None))
+    rg = rglru.RGLRUState(h=("act_pool", "act_ssm_inner"),
+                          conv=("act_pool", None, "act_ssm_inner"))
+    sd = ssm.SSMState(ssd=("act_pool", "act_heads", None, None),
+                      conv=("act_pool", None, "act_ssm_inner"))
+    out = []
+    for stage in cfg.stage_plan():
+        sc = {}
+        for i, (mixer, _) in enumerate(stage.blocks):
+            if mixer in ("attn", "attn_local"):
+                c = LayerCache(kv=kv)
+            elif mixer == "rglru":
+                c = LayerCache(rg=rg)
+            else:
+                c = LayerCache(ssd=sd)
+            if stage.repeat > 1:
+                c = jax.tree.map(lambda a: (None,) + a, c,
+                                 is_leaf=lambda x: isinstance(x, tuple) and
+                                 all(isinstance(e, (str, type(None))) for e in x))
+            sc[f"b{i}"] = c
+        out.append(sc)
+    return {"layers": out, "table": ("act_batch", None),
+            "rows": ("act_batch",)}
+
+
+def _local_nb(cfg: ModelConfig, nb: int, block_len: int, mixer: str) -> int:
+    """Blocks a layer's slot-linear view spans: the full table, clamped to
+    the window for local-attention layers (mirrors ``init_kv_cache``'s
+    ring-buffer clamp; the engine validates window % block_len == 0)."""
+    if mixer == "attn_local" and cfg.window is not None:
+        return min(nb, max(cfg.window // block_len, 1))
+    return nb
+
+
+def paged_gather(cfg: ModelConfig, cache: dict) -> list:
+    """Materialise the slot-linear **monolithic** view of a paged cache.
+
+    Per attention layer: gather the table's pool blocks into a
+    (B, nb*L, ...) ``KVCache`` (window-clamped for local layers); per
+    recurrent layer: gather the slot's state rows.  With the same writes
+    applied, the result is elementwise-equal to the cache ``init_cache``
+    would have produced — the engine runs the UNCHANGED monolithic
+    prefill/decode bodies on it, which is what makes the paged runtime
+    bitwise-identical by construction.  O(B * table length) per dispatch,
+    and the pool stays OUT of the decode-scan carry (carrying the pool
+    would cost O(pool) per step — measured 10x on the smoke decode)."""
+    layers, table, rows = cache["layers"], cache["table"], cache["rows"]
+    nb = table.shape[1]
+    out = []
+    for stage, sc in zip(cfg.stage_plan(), layers):
+        ns = {}
+        for i, (mixer, _) in enumerate(stage.blocks):
+            c = sc[f"b{i}"]
+            stacked = stage.repeat > 1
+            if c.kv is not None:
+                L = c.kv.k.shape[2 if stacked else 1]
+                tbl = table[:, :_local_nb(cfg, nb, L, mixer)]
+                view = (jax.vmap(attention.paged_view, in_axes=(0, None))
+                        (c.kv, tbl) if stacked
+                        else attention.paged_view(c.kv, tbl))
+                c = LayerCache(kv=view)
+            else:
+                axis = 1 if stacked else 0
+                c = jax.tree.map(
+                    lambda a: jnp.take(a, rows, axis=axis, mode="clip"), c)
+            ns[f"b{i}"] = c
+        out.append(ns)
+    return out
+
+
+def paged_scatter_back(cfg: ModelConfig, cache: dict, lin: list,
+                       lo: Array, hi: Array) -> list:
+    """Write a dispatch's results back into the pool: the blocks covering
+    the written position range [lo, hi) per row (``attention.
+    paged_scatter_blocks`` — O(tokens written), shared prefix blocks are
+    never touched) plus the slot's recurrent state rows.  Sentinel table /
+    row ids (empty serve slots) drop their writes."""
+    layers, table, rows = cache["layers"], cache["table"], cache["rows"]
+    nb = table.shape[1]
+    out = []
+    for stage, sc, sl in zip(cfg.stage_plan(), layers, lin):
+        ns = {}
+        for i, (mixer, _) in enumerate(stage.blocks):
+            c, l = sc[f"b{i}"], sl[f"b{i}"]
+            stacked = stage.repeat > 1
+            if c.kv is not None:
+                L = c.kv.k.shape[2 if stacked else 1]
+                tbl = table[:, :_local_nb(cfg, nb, L, mixer)]
+                win = cfg.window if mixer == "attn_local" else None
+                scat = lambda p, v: attention.paged_scatter_blocks(
+                    p, tbl, v, lo, hi, window=win)
+                kv = (jax.vmap(scat)(c.kv, l.kv) if stacked
+                      else scat(c.kv, l.kv))
+                c = c._replace(kv=kv)
+            else:
+                axis = 1 if stacked else 0
+
+                def one(pool_leaf, lin_leaf, axis=axis):
+                    idx = (slice(None), rows) if axis else rows
+                    return pool_leaf.at[idx].set(
+                        lin_leaf.astype(pool_leaf.dtype), mode="drop")
+                c = jax.tree.map(one, c, l)
+            ns[f"b{i}"] = c
+        out.append(ns)
+    return out
+
+
+def _map_kv_pools(cfg: ModelConfig, layers: list, fn) -> list:
+    """Apply ``fn(kv_pool, stacked)`` to every attention pool leaf group."""
+    out = []
+    for stage, sc in zip(cfg.stage_plan(), layers):
+        ns = {}
+        for name, c in sc.items():
+            ns[name] = (c._replace(kv=fn(c.kv, stage.repeat > 1))
+                        if c.kv is not None else c)
+        out.append(ns)
+    return out
+
+
+def _map_state_pools(cfg: ModelConfig, layers: list, fn) -> list:
+    """Apply ``fn(state_leaf, stacked)`` to every recurrent state leaf."""
+    out = []
+    for stage, sc in zip(cfg.stage_plan(), layers):
+        ns = {}
+        for name, c in sc.items():
+            stacked = stage.repeat > 1
+            if c.rg is not None:
+                c = c._replace(rg=jax.tree.map(
+                    lambda a: fn(a, stacked), c.rg))
+            elif c.ssd is not None:
+                c = c._replace(ssd=jax.tree.map(
+                    lambda a: fn(a, stacked), c.ssd))
+            ns[name] = c
+        out.append(ns)
+    return out
+
+
+def reset_blocks(cfg: ModelConfig, layers: list, ids: Array) -> list:
+    """Re-initialise pool blocks ``ids`` (n,) in every KV pool: k/v zeroed,
+    pos = -1.  O(len(ids)) — this replaces ``grow_cache``'s whole-buffer
+    copy for paged session growth.  State rows are untouched."""
+    def one(kv, stacked):
+        if stacked:
+            return attention.KVCache(k=kv.k.at[:, ids].set(0),
+                                     v=kv.v.at[:, ids].set(0),
+                                     pos=kv.pos.at[:, ids].set(-1))
+        return attention.KVCache(k=kv.k.at[ids].set(0),
+                                 v=kv.v.at[ids].set(0),
+                                 pos=kv.pos.at[ids].set(-1))
+    return _map_kv_pools(cfg, layers, one)
+
+
+def copy_blocks(cfg: ModelConfig, layers: list, src: Array,
+                dst: Array) -> list:
+    """Copy pool blocks ``src`` -> ``dst`` in every KV pool (the COW copy:
+    O(blocks copied), at most the one partially filled tail block per
+    diverging slot)."""
+    def one(kv, stacked):
+        if stacked:
+            return attention.KVCache(k=kv.k.at[:, dst].set(kv.k[:, src]),
+                                     v=kv.v.at[:, dst].set(kv.v[:, src]),
+                                     pos=kv.pos.at[:, dst].set(kv.pos[:, src]))
+        return attention.KVCache(k=kv.k.at[dst].set(kv.k[src]),
+                                 v=kv.v.at[dst].set(kv.v[src]),
+                                 pos=kv.pos.at[dst].set(kv.pos[src]))
+    return _map_kv_pools(cfg, layers, one)
+
+
+def reset_rows(cfg: ModelConfig, layers: list, ids: Array) -> list:
+    """Zero recurrent/conv state rows ``ids`` in every state pool (a fresh
+    row must equal the monolithic ``init_cache`` zero state bitwise)."""
+    def one(leaf, stacked):
+        return leaf.at[:, ids].set(0) if stacked else leaf.at[ids].set(0)
+    return _map_state_pools(cfg, layers, one)
+
+
+def copy_rows(cfg: ModelConfig, layers: list, src: Array, dst: Array) -> list:
+    """Copy state rows ``src`` -> ``dst`` (state rows are rewritten every
+    decode step, so forking a session copies them instead of sharing)."""
+    def one(leaf, stacked):
+        if stacked:
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
+    return _map_state_pools(cfg, layers, one)
 
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: Array, cache: list,

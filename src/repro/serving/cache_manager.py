@@ -1,0 +1,399 @@
+"""Paged block-pool cache manager: block tables, refcounts, COW sharing.
+
+The monolithic serving caches (``transformer.init_cache``) back every
+request with a contiguous ``(B, max_len, ...)`` buffer per layer: growing a
+session means ``grow_cache``'s whole-buffer copy, and a system prompt
+absorbed once is re-materialised per slot.  This module replaces that
+representation for engines constructed with ``paged=True``:
+
+* **Block pool** — every attention layer's K/V lives in a fixed pool of
+  fixed-size blocks ``(n_blocks, block_len, kv_heads, head_dim)`` (positions
+  pooled alongside as ``(n_blocks, block_len)``); recurrent/conv state rows
+  (RG-LRU, SSD) are pooled as ``(n_rows, ...)`` rows.  The pool arrays are
+  built by ``transformer.init_block_pool`` and owned by one
+  :class:`CachePool` per engine.
+* **Block tables** — a slot/session references cache storage through a
+  ``(B, nb)`` int32 table of pool block ids plus a ``(B,)`` state-row id.
+  The jitted serving phases gather a slot-linear view of the table
+  (``attention.paged_view``) and scatter writes through it, so the device
+  code never sees anything but the table and the pool.
+* **Growth without copy** — extending a session appends freshly reset
+  blocks to its table (O(new blocks)); nothing existing is copied.  The
+  monolithic path's ``grow_cache`` full-buffer copy is counted by the
+  engine's ``grow_copy`` counter and stays at zero for paged engines.
+* **Copy-on-write prefix sharing** — fanning a session out to N slots
+  copies its *table*, bumping per-block refcounts; blocks at or past the
+  next write position are COW-copied per slot (at most the one partially
+  filled tail block), everything earlier is shared read-only.  A shared
+  block (refcount > 1) is never in any dispatch's write range — that is the
+  allocator's core invariant — so one absorbed system prompt serves N
+  sessions with exactly one prefill.
+* **Eviction / TTL** — session handles are registered with the pool;
+  ``evict_idle(ttl_s)`` releases handles idle past the TTL and returns
+  their blocks.  Reusing an evicted handle raises.
+
+Everything here is host-side bookkeeping (numpy tables, free lists,
+refcounts); the only device work is block reset/copy scatters, each O(the
+blocks touched), dispatched through small cached jits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+
+
+class EvictedSessionError(ValueError):
+    """A paged session handle was used after release / TTL eviction."""
+
+
+@dataclasses.dataclass
+class PagedHandle:
+    """A session's view into a :class:`CachePool`.
+
+    ``tables`` holds only the *covered* blocks (positions written so far,
+    rounded up to a block); the engine re-extends to the dispatch width —
+    with freshly reset blocks, which is exactly the content the monolithic
+    cache has there — before running, so trimming is invisible to numerics.
+    ``epoch`` is the pool epoch at creation (bumped by every eviction
+    sweep); together with ``sid`` it makes stale-handle reuse loud.
+    """
+
+    tables: np.ndarray          # (B, nb_covered) int32 pool block ids
+    rows: np.ndarray            # (B,) int32 state-row ids
+    sid: int                    # session id in the owning pool
+    epoch: int                  # pool epoch at creation
+
+    @property
+    def batch(self) -> int:
+        return int(self.tables.shape[0])
+
+
+class CachePool:
+    """Fixed pool of KV blocks + recurrent-state rows with a host allocator.
+
+    One per paged :class:`~repro.serving.engine.InferenceEngine`.  Owns the
+    device pool arrays (``self.arrays``, the ``layers`` entry of the paged
+    cache pytree) and swaps them for each dispatch's output via
+    :meth:`commit` — sessions hold block *tables*, never arrays, so the swap
+    is invisible to them.
+
+    Allocation prefers the lowest-numbered free blocks (a heap), so a
+    slot's run stays as contiguous as the churn allows — with the pool's
+    block dim sharded over the mesh 'data' axis (``act_pool`` rule,
+    docs/SHARDING.md) contiguous slot-major runs keep a slot's blocks on
+    few shards.
+    """
+
+    def __init__(self, cfg, block_len: int, n_blocks: int, n_rows: int, *,
+                 mesh=None, rules=None, clock=time.monotonic):
+        self.cfg = cfg
+        self.block_len = int(block_len)
+        self.n_blocks = int(n_blocks)
+        self.n_rows = int(n_rows)
+        self.mesh, self.rules = mesh, rules
+        self._clock = clock
+        # local-attention layers view the FIRST ring_blocks table entries
+        # as a ring buffer (slot = position % window): once decode wraps,
+        # ANY of them is in the write range regardless of the linear write
+        # position, so COW must treat them as writable when shared (a
+        # purely linear write-range check would write through shared ring
+        # blocks and corrupt sibling sessions)
+        self.ring_blocks = 0
+        if cfg.window is not None and any(
+                m == "attn_local" for m, _ in cfg.layer_plan()):
+            self.ring_blocks = max(cfg.window // block_len, 1)
+        arrays = T.init_block_pool(cfg, n_blocks, block_len, n_rows)
+        if mesh is not None:
+            rules = rules or sh.SERVE_RULES
+            specs = sh.tree_specs(arrays, T.paged_cache_axes(cfg)["layers"],
+                                  mesh, rules.act_rules)
+            arrays = jax.device_put(arrays, jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s), specs))
+        else:
+            arrays = jax.tree.map(jnp.asarray, arrays)
+        self.arrays = arrays
+        # host metadata
+        import heapq
+        self._heapq = heapq
+        self._free = list(range(n_blocks)); heapq.heapify(self._free)
+        self._free_rows = list(range(n_rows)); heapq.heapify(self._free_rows)
+        self.ref = np.zeros((n_blocks,), np.int64)
+        self.row_ref = np.zeros((n_rows,), np.int64)
+        self.epoch = 0
+        self._sessions: dict[int, dict] = {}
+        self._next_sid = 0
+        self.counters = {"blocks_alloc": 0, "blocks_freed": 0,
+                         "blocks_reset": 0, "cow_copies": 0,
+                         "row_copies": 0, "evictions": 0, "high_water": 0}
+        # pool maintenance ops donate the pool arrays: every call site is
+        # self.arrays = self._op(self.arrays, ...), so the input buffers
+        # are dead the moment the op returns and the scatter can run in
+        # place instead of copying the pool
+        cfg_ = cfg
+        self._reset_blocks = jax.jit(
+            lambda layers, ids: T.reset_blocks(cfg_, layers, ids),
+            donate_argnums=(0,))
+        self._reset_rows = jax.jit(
+            lambda layers, ids: T.reset_rows(cfg_, layers, ids),
+            donate_argnums=(0,))
+        self._copy_blocks = jax.jit(
+            lambda layers, src, dst: T.copy_blocks(cfg_, layers, src, dst),
+            donate_argnums=(0,))
+        self._copy_rows = jax.jit(
+            lambda layers, src, dst: T.copy_rows(cfg_, layers, src, dst),
+            donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # raw block / row allocation
+    # ------------------------------------------------------------------
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def can_alloc(self, n_blocks: int, n_rows: int = 0) -> bool:
+        return (len(self._free) >= n_blocks
+                and len(self._free_rows) >= n_rows)
+
+    def alloc_blocks(self, n: int, *, reset: bool = True) -> np.ndarray:
+        """Take ``n`` free blocks (refcount 1).  ``reset=True`` zeroes their
+        K/V and sets pos = -1 — O(n), the paged replacement for the
+        monolithic path's O(max_len) ``grow_cache`` copy."""
+        if len(self._free) < n:
+            raise RuntimeError(
+                f"cache pool exhausted: need {n} blocks, "
+                f"{len(self._free)}/{self.n_blocks} free — grow pool_blocks, "
+                "release sessions, or enable TTL eviction")
+        ids = np.array([self._heapq.heappop(self._free) for _ in range(n)],
+                       np.int32)
+        self.ref[ids] = 1
+        self.counters["blocks_alloc"] += n
+        self.counters["high_water"] = max(self.counters["high_water"],
+                                          self.blocks_in_use)
+        if reset and n:
+            self.arrays = self._reset_blocks(self.arrays, jnp.asarray(ids))
+            self.counters["blocks_reset"] += n
+        return ids
+
+    def free_blocks(self, ids: np.ndarray) -> None:
+        """Drop one reference per id; blocks at refcount 0 return to the
+        free list (repeats in ``ids`` drop that many references)."""
+        for i in np.asarray(ids, np.int64).ravel():
+            self.ref[i] -= 1
+            assert self.ref[i] >= 0, f"double free of block {i}"
+            if self.ref[i] == 0:
+                self._heapq.heappush(self._free, int(i))
+                self.counters["blocks_freed"] += 1
+
+    def share_blocks(self, ids: np.ndarray) -> None:
+        np.add.at(self.ref, np.asarray(ids, np.int64).ravel(), 1)
+
+    def alloc_rows(self, n: int) -> np.ndarray:
+        if len(self._free_rows) < n:
+            raise RuntimeError(
+                f"cache pool exhausted: need {n} state rows, "
+                f"{len(self._free_rows)}/{self.n_rows} free")
+        ids = np.array([self._heapq.heappop(self._free_rows)
+                        for _ in range(n)], np.int32)
+        self.row_ref[ids] = 1
+        if n:
+            self.arrays = self._reset_rows(self.arrays, jnp.asarray(ids))
+        return ids
+
+    def free_rows(self, ids: np.ndarray) -> None:
+        for i in np.asarray(ids, np.int64).ravel():
+            self.row_ref[i] -= 1
+            assert self.row_ref[i] >= 0, f"double free of row {i}"
+            if self.row_ref[i] == 0:
+                self._heapq.heappush(self._free_rows, int(i))
+
+    def commit(self, layers: Any) -> None:
+        """Swap in the pool arrays a dispatch returned.  Blocks not in the
+        dispatch's write range are bit-identical in the new arrays, so
+        every other session's table stays valid."""
+        self.arrays = layers
+
+    # ------------------------------------------------------------------
+    # session handles
+    # ------------------------------------------------------------------
+
+    def register(self, tables: np.ndarray, rows: np.ndarray) -> PagedHandle:
+        sid = self._next_sid
+        self._next_sid += 1
+        h = PagedHandle(np.asarray(tables, np.int32).copy(),
+                        np.asarray(rows, np.int32).copy(), sid, self.epoch)
+        self._sessions[sid] = {"handle": h, "last_used": self._clock()}
+        return h
+
+    def alloc(self, batch: int, nb: int) -> PagedHandle:
+        """A fresh session: ``batch`` runs of ``nb`` reset blocks + zeroed
+        state rows."""
+        tables = self.alloc_blocks(batch * nb).reshape(batch, nb)
+        rows = self.alloc_rows(batch)
+        return self.register(tables, rows)
+
+    def check(self, handle: PagedHandle) -> None:
+        """Validate + touch a handle; raises on released/evicted ones."""
+        meta = self._sessions.get(handle.sid)
+        if meta is None or meta["handle"] is not handle:
+            raise EvictedSessionError(
+                f"paged session {handle.sid} (pool epoch {handle.epoch}) was "
+                f"released or TTL-evicted (pool epoch now {self.epoch}); its "
+                "blocks are recycled — re-absorb the context")
+        meta["last_used"] = self._clock()
+
+    def release(self, handle: PagedHandle) -> None:
+        """Return a session's blocks/rows to the pool and invalidate it."""
+        self.check(handle)
+        del self._sessions[handle.sid]
+        self.free_blocks(handle.tables)
+        self.free_rows(handle.rows)
+
+    def evict_idle(self, ttl_s: float, now: float | None = None,
+                   exclude=()) -> int:
+        """Release every registered session idle for more than ``ttl_s``
+        seconds; bumps the pool epoch when anything was evicted.
+        ``exclude`` (session ids) protects handles a caller still intends
+        to use — serve() passes the handles its queued warm requests
+        reference, so famine recovery cannot evict its own admissions."""
+        now = self._clock() if now is None else now
+        victims = [sid for sid, m in self._sessions.items()
+                   if now - m["last_used"] > ttl_s and sid not in exclude]
+        for sid in victims:
+            h = self._sessions.pop(sid)["handle"]
+            self.free_blocks(h.tables)
+            self.free_rows(h.rows)
+            self.counters["evictions"] += 1
+        if victims:
+            self.epoch += 1
+        return len(victims)
+
+    @property
+    def live_sessions(self) -> int:
+        return len(self._sessions)
+
+    # ------------------------------------------------------------------
+    # COW table operations
+    # ------------------------------------------------------------------
+
+    def _cow_and_grow(self, run: np.ndarray, nb: int, write_pos: int,
+                      cow_src: list, cow_dst: list,
+                      fresh: list) -> np.ndarray:
+        """One table row made safe to write from ``write_pos`` and extended
+        to ``nb`` blocks.  Shared blocks in the write range — linear blocks
+        at or past the write position, plus the first ``ring_blocks``
+        entries any local-attention layer may wrap into — are queued for
+        COW copy; missing tail blocks are queued for fresh allocation.
+        Device copies/resets are batched by the caller."""
+        row = list(int(b) for b in run)
+        wb = write_pos // self.block_len
+        for j in range(len(row)):
+            if j < min(wb, len(row)) and j >= self.ring_blocks:
+                continue                       # read-only prefix: share
+            if self.ref[row[j]] > 1:
+                nbk = int(self.alloc_blocks(1, reset=False)[0])
+                cow_src.append(row[j]); cow_dst.append(nbk)
+                self.free_blocks(np.array([row[j]]))   # drop our shared ref
+                row[j] = nbk
+        if len(row) < nb:
+            need = nb - len(row)
+            new = self.alloc_blocks(need, reset=False)
+            fresh.extend(int(b) for b in new)
+            row.extend(int(b) for b in new)
+        return np.asarray(row[:nb], np.int32)
+
+    def _flush(self, cow_src: list, cow_dst: list, fresh: list) -> None:
+        if cow_src:
+            self.arrays = self._copy_blocks(
+                self.arrays, jnp.asarray(np.asarray(cow_src, np.int32)),
+                jnp.asarray(np.asarray(cow_dst, np.int32)))
+            self.counters["cow_copies"] += len(cow_src)
+        if fresh:
+            self.arrays = self._reset_blocks(
+                self.arrays, jnp.asarray(np.asarray(fresh, np.int32)))
+            self.counters["blocks_reset"] += len(fresh)
+
+    def extend(self, handle: PagedHandle, nb: int,
+               write_pos: np.ndarray) -> np.ndarray:
+        """Grow ``handle`` (in place) to ``nb`` blocks per row, COW-copying
+        any shared block in the per-row write range.  Returns the new
+        ``(B, nb)`` tables — appended blocks are freshly reset, never a
+        whole-cache copy."""
+        self.check(handle)
+        write_pos = np.asarray(write_pos, np.int64).reshape(-1)
+        cow_src, cow_dst, fresh = [], [], []
+        rows = [self._cow_and_grow(handle.tables[b], nb, int(write_pos[b]),
+                                   cow_src, cow_dst, fresh)
+                for b in range(handle.batch)]
+        self._flush(cow_src, cow_dst, fresh)
+        handle.tables = np.stack(rows, axis=0)
+        return handle.tables
+
+    def select(self, handle: PagedHandle, idx) -> PagedHandle:
+        """Fork rows ``idx`` of a session into a NEW handle: block tables
+        are copied by reference (refcount++ — repeated indices fan one row
+        out to many), state rows are copied on device (they are rewritten
+        every decode step, so they cannot be shared).  O(table + state
+        rows), never O(cache)."""
+        self.check(handle)
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        tables = handle.tables[idx]
+        self.share_blocks(tables)
+        rows = self.alloc_rows(len(idx))
+        self.arrays = self._copy_rows(
+            self.arrays, jnp.asarray(handle.rows[idx]), jnp.asarray(rows))
+        self.counters["row_copies"] += len(idx)
+        return self.register(tables, rows)
+
+    def admit_row(self, handle: PagedHandle, nb: int, write_pos: int,
+                  row_index: int = 0) -> tuple[np.ndarray, int]:
+        """Serve-slot admission off a (possibly shared) session handle: the
+        slot gets its own table row — prefix blocks shared by reference,
+        write-range blocks COW-copied, tail freshly allocated — plus a
+        device copy of the state row.  The handle itself is untouched, so
+        N requests can admit off one absorbed prefix."""
+        self.check(handle)
+        self.share_blocks(handle.tables[row_index])   # our working reference
+        cow_src, cow_dst, fresh = [], [], []
+        run = self._cow_and_grow(handle.tables[row_index], nb, write_pos,
+                                 cow_src, cow_dst, fresh)
+        self._flush(cow_src, cow_dst, fresh)
+        row = int(self.alloc_rows(1)[0])
+        self.arrays = self._copy_rows(
+            self.arrays, jnp.asarray(handle.rows[row_index:row_index + 1]),
+            jnp.asarray(np.array([row], np.int32)))
+        self.counters["row_copies"] += 1
+        return run, row
+
+    def alloc_run(self, nb: int) -> tuple[np.ndarray, int]:
+        """A cold serve-slot run: ``nb`` reset blocks + one zeroed row."""
+        return self.alloc_blocks(nb), int(self.alloc_rows(1)[0])
+
+    def adopt(self, blocks: np.ndarray, row: int,
+              covered_blocks: int) -> PagedHandle:
+        """Turn an owned serve-slot run into a session handle, trimming to
+        ``covered_blocks`` (the rest is freed — the density win of paged
+        retirement: a session keeps O(len), not O(max_len))."""
+        blocks = np.asarray(blocks, np.int32)
+        keep, drop = blocks[:covered_blocks], blocks[covered_blocks:]
+        if len(drop):
+            self.free_blocks(drop)
+        return self.register(keep[None], np.array([row], np.int32))
+
+    def trim(self, handle: PagedHandle, covered_blocks: int) -> None:
+        """Free blocks past ``covered_blocks`` in every row of ``handle``
+        (positions there were never written — re-extension resets fresh
+        blocks to the same all-zero contents)."""
+        if covered_blocks >= handle.tables.shape[1]:
+            return
+        self.free_blocks(handle.tables[:, covered_blocks:])
+        handle.tables = handle.tables[:, :covered_blocks].copy()

@@ -31,6 +31,7 @@ bitwise-identical to the single-device path.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 from typing import Any, Sequence
 
@@ -44,6 +45,7 @@ from repro.core.uncertainty import UncertaintyConfig
 from repro.distributed import sharding as sh
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
+from repro.serving.cache_manager import PagedHandle
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 Array = jax.Array
@@ -67,18 +69,21 @@ def bucket_len(s: int, granularity: int = 512, floor: int = 8) -> int:
 # Jitted phases
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "max_len", "mesh", "rules"))
-def _prefill_absorb(params, cfg: ModelConfig, prompts, s_orig, max_len: int,
-                    mesh=None, rules=None):
-    """prompts (B, Sb) left-padded to a bucket; s_orig = pre-bucket length.
-    Returns (first greedy token (B,), its logits (B,V) f32, filled cache).
+@partial(jax.jit, static_argnames=("cfg", "mesh", "rules"))
+def _prefill_into(params, cfg: ModelConfig, prompts, s_orig, cache,
+                  mesh=None, rules=None):
+    """Cold prefill into a provided cache — a fresh monolithic cache or a
+    paged cache whose blocks the pool just reset (identical contents, so
+    the two entry points share one implementation).  prompts (B, Sb)
+    left-padded to a bucket; s_orig = pre-bucket length.  Returns (first
+    greedy token (B,), its logits (B,V) f32, filled cache).
 
-    On-mesh (mesh + rules static args set) the fresh cache is pinned to its
+    On-mesh (mesh + rules static args set) the cache is pinned to its
     logical-axis sharding before the prefill fills it, so the bulk KV
     scatter and the carried recurrent states come out sharded.
     """
     B, S = prompts.shape
-    cache = T.constrain_cache(T.init_cache(cfg, B, max_len), cfg, mesh, rules)
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
     # columns left of the original padded prompt get negative positions and
     # are inert in every mixer; real columns keep positions 0..s_orig-1
     positions = jnp.broadcast_to(
@@ -89,6 +94,16 @@ def _prefill_absorb(params, cfg: ModelConfig, prompts, s_orig, max_len: int,
     last = sh.constrain(last, ("act_batch", "act_vocab"), mesh, rules)
     cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
     return cur, last, cache
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_len", "mesh", "rules"))
+def _prefill_absorb(params, cfg: ModelConfig, prompts, s_orig, max_len: int,
+                    mesh=None, rules=None):
+    """Monolithic cold prefill: initialise a (B, max_len) cache and absorb
+    the prompt into it (see ``_prefill_into``)."""
+    B = prompts.shape[0]
+    return _prefill_into(params, cfg, prompts, s_orig,
+                         T.init_cache(cfg, B, max_len), mesh=mesh, rules=rules)
 
 
 @partial(jax.jit, static_argnames=("cfg", "ucfg", "steps", "greedy",
@@ -154,6 +169,129 @@ def _generate_fused(params, cfg: ModelConfig, prompts, s_orig, rng,
         ucfg, max_new, greedy, mesh=mesh, rules=rules)
     h, v = h_per.mean(-1), v_per.mean(-1)
     return toks, lgs, U.combine_terms(h, v, ucfg), h, v, carry
+
+
+# ---------------------------------------------------------------------------
+# Paged entry points: gather the slot-linear view of the block pool, run the
+# UNCHANGED monolithic bodies on it, scatter only the written block range
+# back (transformer.paged_gather / paged_scatter_back).  Three consequences:
+#   * bitwise parity with the monolithic path by construction (the same
+#     compiled math runs on an elementwise-equal cache);
+#   * the decode-scan carry stays shape-stable and O(B * max_len) — the
+#     pool never rides the carry (that costs O(pool) per step: XLA
+#     re-materialises scan carries, measured 10x on the smoke decode);
+#   * pool writes are O(tokens written), so refcount-shared prefix blocks
+#     are physically never touched (the COW invariant).
+# The pool arrays are DONATED into each dispatch — the engine commits the
+# returned arrays to the CachePool immediately, so the old buffers are
+# dead; on backends with donation support the scatter-back aliases in
+# place instead of copying the pool.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "mesh", "rules"),
+         donate_argnames=("cache",))
+def _prefill_into_paged(params, cfg: ModelConfig, prompts, s_orig, cache,
+                        mesh=None, rules=None):
+    """Paged cold prefill: gather -> ``_prefill_into`` -> scatter blocks
+    [0, s_orig) back.  Returns (cur, last, updated paged cache)."""
+    B = prompts.shape[0]
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    lin = T.paged_gather(cfg, cache)
+    cur, last, lin = _prefill_into(params, cfg, prompts, s_orig, lin,
+                                   mesh=mesh, rules=rules)
+    layers = T.paged_scatter_back(
+        cfg, cache, lin, jnp.zeros((B,), jnp.int32),
+        jnp.broadcast_to(s_orig, (B,)).astype(jnp.int32))
+    return cur, last, T.paged_cache(layers, cache["table"], cache["rows"])
+
+
+@partial(jax.jit, static_argnames=("cfg", "mesh", "rules"),
+         donate_argnames=("cache",))
+def _prefill_continue_paged(params, cfg: ModelConfig, prompts, s_orig, start,
+                            cache, mesh=None, rules=None):
+    """Paged continuation prefill: gather -> ``_prefill_continue`` ->
+    scatter blocks [start, start + s_orig) back."""
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    lin = T.paged_gather(cfg, cache)
+    cur, last, lin = _prefill_continue(params, cfg, prompts, s_orig, start,
+                                       lin, mesh=mesh, rules=rules)
+    layers = T.paged_scatter_back(cfg, cache, lin, start, start + s_orig)
+    return cur, last, T.paged_cache(layers, cache["table"], cache["rows"])
+
+
+@partial(jax.jit, static_argnames=("cfg", "ucfg", "steps", "greedy",
+                                   "with_logits", "mesh", "rules"),
+         donate_argnames=("cache",))
+def _decode_scan_paged(params, cfg: ModelConfig, cur, last, cache, pos, rng,
+                       ucfg: UncertaintyConfig, steps: int, greedy: bool,
+                       with_logits: bool = True, mesh=None, rules=None):
+    """Paged decode chunk: gather -> the monolithic ``_decode_scan`` ->
+    scatter blocks [pos, pos + steps) back.  Carry mirrors ``_decode_scan``
+    with the paged cache pytree in the cache slot."""
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    lin = T.paged_gather(cfg, cache)
+    toks, lgs, h_per, v_per, carry = _decode_scan(
+        params, cfg, cur, last, lin, pos, rng, ucfg, steps, greedy,
+        with_logits=with_logits, mesh=mesh, rules=rules)
+    cur2, last2, lin2, pos2, rng2 = carry
+    layers = T.paged_scatter_back(cfg, cache, lin2, pos, pos + steps)
+    out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+    return toks, lgs, h_per, v_per, (cur2, last2, out_cache, pos2, rng2)
+
+
+@partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "greedy",
+                                   "mesh", "rules"),
+         donate_argnames=("cache",))
+def _generate_fused_paged(params, cfg: ModelConfig, prompts, s_orig, cache,
+                          rng, ucfg: UncertaintyConfig, max_new: int,
+                          greedy: bool, mesh=None, rules=None):
+    """Paged sibling of ``_generate_fused``: the cache comes in as the
+    paged pool + this request's block tables / state rows (freshly
+    allocated and reset by the CachePool) instead of being initialised
+    in-trace.  One gather, the whole monolithic prefill + scanned decode,
+    one scatter of blocks [0, s_orig + max_new)."""
+    B = prompts.shape[0]
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    lin = T.paged_gather(cfg, cache)
+    cur, last, lin = _prefill_into(params, cfg, prompts, s_orig, lin,
+                                   mesh=mesh, rules=rules)
+    toks, lgs, h_per, v_per, carry = _decode_scan(
+        params, cfg, cur, last, lin, jnp.broadcast_to(s_orig, (B,)), rng,
+        ucfg, max_new, greedy, mesh=mesh, rules=rules)
+    cur2, last2, lin2, pos2, rng2 = carry
+    layers = T.paged_scatter_back(
+        cfg, cache, lin2, jnp.zeros((B,), jnp.int32),
+        jnp.broadcast_to(s_orig + max_new, (B,)).astype(jnp.int32))
+    out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+    h, v = h_per.mean(-1), v_per.mean(-1)
+    return (toks, lgs, U.combine_terms(h, v, ucfg), h, v,
+            (cur2, last2, out_cache, pos2, rng2))
+
+
+@partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "greedy",
+                                   "mesh", "rules"),
+         donate_argnames=("cache",))
+def _generate_continue_paged(params, cfg: ModelConfig, prompts, s_orig,
+                             start, cache, rng, ucfg: UncertaintyConfig,
+                             max_new: int, greedy: bool, mesh=None,
+                             rules=None):
+    """Paged sibling of ``_generate_continue``: continuation prefill +
+    scanned decode over the gathered view, scatter of blocks
+    [start, start + s_orig + max_new)."""
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    lin = T.paged_gather(cfg, cache)
+    cur, last, lin = _prefill_continue(params, cfg, prompts, s_orig, start,
+                                       lin, mesh=mesh, rules=rules)
+    toks, lgs, h_per, v_per, carry = _decode_scan(
+        params, cfg, cur, last, lin, start + s_orig, rng, ucfg, max_new,
+        greedy, mesh=mesh, rules=rules)
+    cur2, last2, lin2, pos2, rng2 = carry
+    layers = T.paged_scatter_back(cfg, cache, lin2, start,
+                                  start + s_orig + max_new)
+    out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+    h, v = h_per.mean(-1), v_per.mean(-1)
+    return (toks, lgs, U.combine_terms(h, v, ucfg), h, v,
+            (cur2, last2, out_cache, pos2, rng2))
 
 
 @partial(jax.jit, static_argnames=("cfg", "mesh", "rules"))
@@ -247,6 +385,29 @@ class SessionState:
       ``cur``/``last`` and any recurrent-mixer state have absorbed
       post-stop garbage steps.  Such a handle only supports continuation
       prefill on attention-only models; anything else raises.
+
+    On a paged engine (``InferenceEngine(paged=True)``), ``cache`` is not
+    an array pytree but a :class:`~repro.serving.cache_manager.PagedHandle`
+    — the session's block tables, state-row ids and the pool epoch.  The
+    handle references pool storage by id, so it is O(table) on host memory,
+    fan-out (``state_select`` / ``engine.fanout``) is a refcounted table
+    copy, and growth appends blocks instead of copying the cache;
+    ``max_len`` stays the *logical* capacity (what the monolithic engine
+    would carry), which keeps paged dispatch shapes — and therefore
+    numerics — bitwise-identical to the monolithic path even after the
+    pool trims the physical tables to the covered length.  Paged handles
+    stay registered with the pool until ``engine.release(state)`` or TTL
+    eviction; reuse after that raises ``EvictedSessionError``.
+
+    Unlike monolithic states (immutable array pytrees), a paged handle is
+    a LIVE reference into the pool: continuing or extending it writes its
+    blocks and state rows in place.  The single-use convention is
+    therefore load-bearing on paged recurrent-mixer engines — extending
+    the same handle twice gathers post-extension state rows the second
+    time.  (On attention-only models a repeated greedy extension rewrites
+    identical K/V, so benchmark-style reuse stays exact.)  Fork with
+    ``state_select`` / ``fanout`` before extending if you need both
+    timelines.
     """
     cache: Any
     pos: Any
@@ -282,14 +443,27 @@ class InferenceEngine:
     max_len: int = 128
     mesh: Any = None                    # jax.sharding.Mesh with (data, model)
     rules: Any = None                   # ShardingRules; default SERVE_RULES
+    # paged block-pool cache manager (docs/RUNTIME.md "Paged caches &
+    # prefix sharing"): KV lives in a fixed pool of block_len-sized blocks
+    # addressed through per-slot block tables, session growth appends
+    # blocks instead of grow_cache's whole-buffer copy, and absorbed
+    # prefixes fan out to many slots copy-on-write.  Bitwise-identical to
+    # the monolithic path (the gathered table view equals the monolithic
+    # cache elementwise) as long as block_len divides the engine's cache
+    # bucketing — the default 64 always does.
+    paged: bool = False
+    block_len: int = 64
+    pool_blocks: int | None = None      # default: 16 full-length sessions
+    pool_rows: int | None = None        # recurrent-state rows in the pool
 
     def __post_init__(self):
         self._mesh_jits: dict = {}
         # host-side dispatch accounting: how many cold prefills, warm
         # continuation prefills and decode-only resumes this engine issued
-        # (the gateway tests assert the probe's swarm round adds zero here)
+        # (the gateway tests assert the probe's swarm round adds zero here),
+        # plus grow_copy — whole-cache growth copies, always 0 when paged
         self.counters = {"prefill": 0, "prefill_continue": 0,
-                         "decode_only": 0}
+                         "decode_only": 0, "grow_copy": 0}
         # warm continuation attends CHUNKED over the cache, which needs the
         # cache length divisible by the KV block once it exceeds one block
         # (cold prefill/decode never hit this: they chunk only the span)
@@ -298,6 +472,28 @@ class InferenceEngine:
             self.max_len = -(-self.max_len // kvb) * kvb
         self._recurrent = any(m in ("rglru", "ssd")
                               for m, _ in self.cfg.layer_plan())
+        self.pool = None
+        if self.paged:
+            L = self.block_len
+            if self.max_len % L:
+                # whole-block tables AND kv-chunk divisibility (lcm)
+                self.max_len = self._round_len(self.max_len)
+            has_local = any(m == "attn_local"
+                            for m, _ in self.cfg.layer_plan())
+            if has_local and self.cfg.window is not None \
+                    and self.cfg.window % L:
+                raise ValueError(
+                    f"paged cache: block_len={L} must divide the local-"
+                    f"attention window {self.cfg.window} (the ring view is "
+                    "assembled from whole blocks)")
+            from repro.serving.cache_manager import CachePool
+            n_blocks = self.pool_blocks or max(64, 16 * self.max_len // L)
+            n_rows = self.pool_rows or max(
+                16, n_blocks * L // max(self.max_len, 1))
+            self.rules = self.rules or (sh.SERVE_RULES
+                                        if self.mesh is not None else None)
+            self.pool = CachePool(self.cfg, L, n_blocks, n_rows,
+                                  mesh=self.mesh, rules=self.rules)
         if self.mesh is None:
             return
         self.rules = self.rules or sh.SERVE_RULES
@@ -422,11 +618,18 @@ class InferenceEngine:
     def _round_len(self, need: int) -> int:
         """Bucket a cache length: multiples of 64, and — because warm
         continuation attends chunked over the *cache* — multiples of
-        ``attn_kv_block`` once the cache outgrows a single KV chunk."""
-        n = -(-need // 64) * 64
+        ``attn_kv_block`` once the cache outgrows a single KV chunk.
+        Paged engines round to the lcm with ``block_len`` so whole-block
+        tables NEVER break the KV-chunk divisibility invariant (a
+        block_len that divides 64/attn_kv_block — the default 64 does —
+        leaves the lengths, and therefore numerics, identical to the
+        monolithic path)."""
+        g = math.lcm(64, self.block_len) if self.paged else 64
+        n = -(-need // g) * g
         kvb = self.cfg.attn_kv_block
         if n > kvb:
-            n = -(-n // kvb) * kvb
+            gk = math.lcm(kvb, self.block_len) if self.paged else kvb
+            n = -(-n // gk) * gk
         return n
 
     def _cache_len(self, s_bucket: int, max_new: int) -> int:
@@ -460,14 +663,69 @@ class InferenceEngine:
 
     def _grown_cache(self, state: SessionState, need: int):
         """(cache, max_len) with at least ``need`` slots, growing the
-        session's cache (empty new slots) when it is too short."""
+        session's cache (empty new slots) when it is too short.  Monolithic
+        growth is ``grow_cache``'s whole-buffer copy (counted in
+        ``counters["grow_copy"]``); the paged path never comes through here
+        — it appends reset blocks to the block table instead."""
         if need <= state.max_len:
             return state.cache, state.max_len
         new_len = self._round_len(need)
+        self.counters["grow_copy"] += 1
         cache = T.grow_cache(self.cfg, state.cache, state.batch, new_len)
         if self.mesh is not None:
             cache = jax.device_put(cache, self._cache_sh(cache))
         return cache, new_len
+
+    # ------------------------------------------------------------------
+    # Paged-cache helpers (CachePool-backed sessions)
+    # ------------------------------------------------------------------
+
+    def _paged_dev_cache(self, tables: np.ndarray, rows: np.ndarray):
+        """The paged cache pytree for one dispatch: engine pool arrays +
+        this dispatch's block tables and state-row ids."""
+        return T.paged_cache(self.pool.arrays,
+                             jnp.asarray(np.asarray(tables, np.int32)),
+                             jnp.asarray(np.asarray(rows, np.int32)))
+
+    def _paged_grown(self, state: SessionState, need: int):
+        """Paged sibling of ``_grown_cache``: extend the session's block
+        tables to the dispatch length (appending freshly reset blocks,
+        COW-copying any shared block in the write range) — no whole-cache
+        copy, ever.  Returns (cache pytree, dispatch max_len).  The
+        dispatch length follows the same formula as the monolithic path so
+        paged and monolithic dispatch shapes (and numerics) match."""
+        handle = state.cache
+        self.pool.check(handle)
+        disp = state.max_len if need <= state.max_len \
+            else self._round_len(need)
+        tables = self.pool.extend(handle, disp // self.block_len,
+                                  np.asarray(state.pos))
+        return self._paged_dev_cache(tables, handle.rows), disp
+
+    def release(self, state: SessionState) -> None:
+        """Return a paged session's blocks to the pool and invalidate the
+        handle (no-op for monolithic states — they are plain arrays)."""
+        if self.paged and isinstance(state.cache, PagedHandle):
+            self.pool.release(state.cache)
+
+    def evict_idle_sessions(self, ttl_s: float) -> int:
+        """TTL sweep over registered paged sessions (see CachePool)."""
+        return self.pool.evict_idle(ttl_s) if self.paged else 0
+
+    def fanout(self, state: SessionState, n: int) -> SessionState:
+        """Fan a batch-1 session out to ``n`` rows sharing its prefix.
+
+        Paged: a refcounted block-table copy — full prefix blocks are
+        shared read-only, the partially filled tail block is copy-on-write
+        per row, state rows are copied; NO prefill or cache copy happens,
+        so N sessions over one absorbed system prompt cost exactly one
+        prefill.  Monolithic: falls back to duplicating the cache rows
+        (``state_select`` with a repeated index) — correct, but O(n * len).
+        """
+        if state.batch != 1:
+            raise ValueError(f"fanout needs a batch-1 state, got "
+                             f"{state.batch}")
+        return self.state_select(state, np.zeros((n,), np.int32))
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray | None, max_new: int, *,
@@ -516,11 +774,20 @@ class InferenceEngine:
         if state is not None:
             self._check_state(state, extension=False)
         B, S = prompts.shape
+        handle = None
         if state is None:
             pb, s_orig = self._bucket(prompts)
             max_len = self._cache_len(pb.shape[1], max_new)
             self.counters["prefill"] += 1
-            if self.mesh is not None:
+            if self.paged:
+                handle = self.pool.alloc(B, max_len // self.block_len)
+                out = _generate_fused_paged(
+                    self.params, self.cfg, jnp.asarray(pb),
+                    jnp.int32(s_orig),
+                    self._paged_dev_cache(handle.tables, handle.rows), rng,
+                    self.ucfg, int(max_new), bool(greedy),
+                    mesh=self.mesh, rules=self.rules)
+            elif self.mesh is not None:
                 fn = self._fused_sharded(B, pb.shape[1], max_len,
                                          int(max_new), bool(greedy))
                 out = fn(self.params, jnp.asarray(pb), jnp.int32(s_orig),
@@ -536,10 +803,20 @@ class InferenceEngine:
                 raise ValueError(f"state batch {state.batch} != prompt "
                                  f"batch {B}")
             pb, s_orig = self._bucket_right(prompts)
-            cache, max_len = self._grown_cache(
-                state, state.offset + pb.shape[1] + max_new)
+            need = state.offset + pb.shape[1] + max_new
+            if self.paged:
+                handle = state.cache
+                cache, max_len = self._paged_grown(state, need)
+            else:
+                cache, max_len = self._grown_cache(state, need)
             self.counters["prefill_continue"] += 1
-            if self.mesh is not None:
+            if self.paged:
+                out = _generate_continue_paged(
+                    self.params, self.cfg, jnp.asarray(pb),
+                    jnp.int32(s_orig), state.pos, cache, rng, self.ucfg,
+                    int(max_new), bool(greedy),
+                    mesh=self.mesh, rules=self.rules)
+            elif self.mesh is not None:
                 fn = self._cont_sharded(B, pb.shape[1], max_len,
                                         int(max_new), bool(greedy))
                 out = fn(self.params, jnp.asarray(pb), jnp.int32(s_orig),
@@ -556,7 +833,20 @@ class InferenceEngine:
                "logits": lgs,
                "h_mean": np.asarray(h), "v_mean": np.asarray(v),
                "prompt_lengths": (prompts != PAD).sum(axis=1)}
-        if return_state:
+        if self.paged:
+            cur, last, cache, pos, crng = carry
+            self.pool.commit(cache["layers"])
+            if return_state:
+                self.pool.trim(handle, -(-offset // self.block_len))
+                res["state"] = SessionState(handle, pos, cur, last, max_len,
+                                            offset, rng=crng)
+            elif state is None:
+                self.pool.release(handle)   # one-shot: blocks back now
+            else:
+                # continued session not handed back: keep only the covered
+                # blocks until the caller reuses or releases the handle
+                self.pool.trim(handle, -(-offset // self.block_len))
+        elif return_state:
             cur, last, cache, pos, crng = carry
             res["state"] = SessionState(cache, pos, cur, last, max_len,
                                         offset, rng=crng)
@@ -568,6 +858,7 @@ class InferenceEngine:
         recurrent mixers) a corrupted carried state — only continuation
         prefill on an attention-only model survives that (the prefill
         replaces cur/last and stale KV entries are masked/overwritten)."""
+        self._state_kind_check(state)
         if state.exact:
             return
         if extension or self._recurrent:
@@ -579,6 +870,19 @@ class InferenceEngine:
                    "recurrent-mixer state absorbed post-stop steps")
                 + "; re-serve with max_new-aligned retirement or an "
                   "attention-only model")
+
+    def _state_kind_check(self, state: SessionState):
+        """A paged engine only accepts PagedHandle-backed states (and vice
+        versa — the cache representations are not interchangeable), and a
+        paged handle must still be registered with the pool (released /
+        TTL-evicted handles raise EvictedSessionError)."""
+        got = isinstance(state.cache, PagedHandle)
+        if got != self.paged:
+            raise ValueError(
+                f"session state is {'paged' if got else 'monolithic'} but "
+                f"this engine is {'paged' if self.paged else 'monolithic'}")
+        if self.paged:
+            self.pool.check(state.cache)
 
     def absorb(self, prompts: np.ndarray, *,
                state: SessionState | None = None) -> SessionState:
@@ -597,26 +901,45 @@ class InferenceEngine:
         """
         prompts = np.asarray(prompts, np.int32)
         B, S = prompts.shape
+        handle = None
         if state is None:
             pb, s_orig = self._bucket(prompts)
             max_len = self._cache_len(pb.shape[1], 0)
             self.counters["prefill"] += 1
-            cur, last, cache = _prefill_absorb(
-                self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
-                max_len, mesh=self.mesh, rules=self.rules)
+            if self.paged:
+                handle = self.pool.alloc(B, max_len // self.block_len)
+                cache = self._paged_dev_cache(handle.tables, handle.rows)
+                cur, last, cache = _prefill_into_paged(
+                    self.params, self.cfg, jnp.asarray(pb),
+                    jnp.int32(s_orig), cache, mesh=self.mesh,
+                    rules=self.rules)
+            else:
+                cur, last, cache = _prefill_absorb(
+                    self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
+                    max_len, mesh=self.mesh, rules=self.rules)
             pos, offset = jnp.full((B,), s_orig, jnp.int32), s_orig
         else:
             if state.batch != B:
                 raise ValueError(f"state batch {state.batch} != prompt "
                                  f"batch {B}")
+            self._state_kind_check(state)
             pb, s_orig = self._bucket_right(prompts)
-            cache, max_len = self._grown_cache(
-                state, state.offset + pb.shape[1])
+            need = state.offset + pb.shape[1]
+            if self.paged:
+                handle = state.cache
+                cache, max_len = self._paged_grown(state, need)
+            else:
+                cache, max_len = self._grown_cache(state, need)
             self.counters["prefill_continue"] += 1
-            cur, last, cache = _prefill_continue(
+            fn = _prefill_continue_paged if self.paged else _prefill_continue
+            cur, last, cache = fn(
                 self.params, self.cfg, jnp.asarray(pb), jnp.int32(s_orig),
                 state.pos, cache, mesh=self.mesh, rules=self.rules)
             pos, offset = state.pos + s_orig, state.offset + s_orig
+        if self.paged:
+            self.pool.commit(cache["layers"])
+            self.pool.trim(handle, -(-offset // self.block_len))
+            cache = handle
         return SessionState(cache, pos, cur, last, max_len, offset)
 
     def _extend(self, max_new: int, state: SessionState, greedy: bool,
@@ -628,12 +951,20 @@ class InferenceEngine:
         this holds for greedy AND sampled decode — states without a
         carried rng, e.g. serve()-extracted ones, restart the stream from
         ``seed`` and are bitwise for greedy only)."""
-        cache, max_len = self._grown_cache(state, state.offset + max_new)
+        if self.paged:
+            cache, max_len = self._paged_grown(state, state.offset + max_new)
+        else:
+            cache, max_len = self._grown_cache(state, state.offset + max_new)
         self.counters["decode_only"] += 1
         if state.rng is not None:
             rng = state.rng
         B = state.batch
-        if self.mesh is not None:
+        if self.paged:
+            toks, lgs, h_per, v_per, carry = _decode_scan_paged(
+                self.params, self.cfg, state.cur, state.last, cache,
+                state.pos, rng, self.ucfg, int(max_new), bool(greedy),
+                mesh=self.mesh, rules=self.rules)
+        elif self.mesh is not None:
             toks, h_per, v_per, carry = self._decode_sharded(
                 B, max_len, int(max_new), bool(greedy))(
                     self.params, state.cur, state.last, cache, state.pos,
@@ -648,22 +979,41 @@ class InferenceEngine:
                "u": np.asarray(U.combine_terms(h, v, self.ucfg)),
                "logits": lgs, "h_mean": h, "v_mean": v,
                "prompt_lengths": np.zeros((B,), np.int64)}
-        if return_state:
+        offset = state.offset + max_new
+        if self.paged:
+            cur, last, cache, pos, crng = carry
+            self.pool.commit(cache["layers"])
+            self.pool.trim(state.cache, -(-offset // self.block_len))
+            if return_state:
+                res["state"] = SessionState(state.cache, pos, cur, last,
+                                            max_len, offset, rng=crng)
+        elif return_state:
             cur, last, cache, pos, crng = carry
             res["state"] = SessionState(cache, pos, cur, last, max_len,
-                                        state.offset + max_new, rng=crng)
+                                        offset, rng=crng)
         return res
 
     def state_select(self, state: SessionState, idx) -> SessionState:
-        """Slice a batched session handle down to rows ``idx`` (forking is
-        fine — leaves are immutable).  Used by the gateway to hand the
-        swarm round the probe's state for just the SWARM-routed queries."""
-        idx = jnp.asarray(np.asarray(idx, np.int32))
-        axes = self._slot_batch_axes(state.max_len)
-        cache = jax.tree.map(lambda s, ax: jnp.take(s, idx, axis=ax),
-                             state.cache, axes)
-        if self.mesh is not None:
-            cache = jax.device_put(cache, self._cache_sh(cache))
+        """Slice (or fan out — repeated indices are fine) a batched session
+        handle to rows ``idx``.  Used by the gateway to hand the swarm
+        round the probe's state for just the SWARM-routed queries.
+
+        Monolithic: materialises the selected cache rows (O(rows * len)).
+        Paged: a refcounted block-table copy + a state-row device copy —
+        the probe -> swarm handoff becomes O(table), and shared blocks are
+        protected by COW on the next write."""
+        idx_np = np.asarray(idx, np.int32)
+        idx = jnp.asarray(idx_np)
+        if self.paged:
+            self._state_kind_check(state)
+            handle = self.pool.select(state.cache, idx_np)
+            cache = handle
+        else:
+            axes = self._slot_batch_axes(state.max_len)
+            cache = jax.tree.map(lambda s, ax: jnp.take(s, idx, axis=ax),
+                                 state.cache, axes)
+            if self.mesh is not None:
+                cache = jax.device_put(cache, self._cache_sh(cache))
         return SessionState(cache, jnp.take(state.pos, idx),
                             jnp.take(state.cur, idx),
                             jnp.take(state.last, idx, axis=0),
@@ -774,14 +1124,17 @@ class InferenceEngine:
     def serve(self, requests: Sequence[Request] | None = None, *,
               batcher: ContinuousBatcher | None = None, n_slots: int = 4,
               decode_chunk: int = 8, stop_token: int | None = None,
-              greedy: bool = True, seed: int = 0) -> list[dict]:
+              greedy: bool = True, seed: int = 0,
+              session_ttl_s: float | None = None) -> list[dict]:
         """Streaming entry point: requests flow through a ContinuousBatcher.
 
         Loop: admit queued requests into free slots (each admission is one
         jitted prefill that is spliced into the slot cache) -> one scanned
         decode chunk over ALL slots -> record tokens / retire finished slots
         (stop token or max_new) -> repeat until idle.  Requests are admitted
-        mid-flight as slots free up.
+        mid-flight as slots free up, ordered earliest-deadline-first then by
+        priority (``Request.deadline_ms`` / ``Request.priority``; FIFO among
+        equals).
 
         Returns one dict per finished request: {"rid", "tokens", "u"},
         in completion order.  With ``greedy=True`` (default) tokens are
@@ -802,6 +1155,19 @@ class InferenceEngine:
         entries are masked and later overwritten — but the *recurrent*
         state of RG-LRU/SSD mixers would have absorbed the chunk's
         post-stop garbage steps; chunk-aligned retirement avoids that).
+
+        Paged engines (docs/RUNTIME.md "Paged caches & prefix sharing"):
+        slots reference the block pool through per-slot tables — admission
+        asks the pool for blocks (requests that don't fit wait in the
+        queue until retirements free blocks), a cold admission prefills
+        straight into its blocks, a warm admission is a refcounted table
+        copy off the session handle (shared prefix blocks are NOT copied;
+        N requests carrying the SAME absorbed handle fan its prefix out
+        with zero extra prefills), retirement returns blocks to the pool,
+        and ``return_state`` hand-back is a table adoption trimmed to the
+        covered length — no cache extraction copy.  ``session_ttl_s``
+        evicts registered sessions idle past the TTL whenever the pool
+        runs out of blocks (their handles raise on reuse).
         """
         if (requests is None) == (batcher is None):
             raise ValueError("pass exactly one of requests / batcher")
@@ -830,29 +1196,41 @@ class InferenceEngine:
 
         max_len = max(_need(r) for r in pending)
 
-        cache = T.init_cache(self.cfg, n_slots, max_len)
+        paged = self.paged
         V = self.cfg.vocab_size
         cur = jnp.zeros((n_slots,), jnp.int32)
         last = jnp.zeros((n_slots, V), jnp.float32)
         pos = jnp.zeros((n_slots,), jnp.int32)
+        if paged:
+            nb = max_len // self.block_len
+            # sentinel table/row ids: empty slots decode harmlessly — their
+            # pool writes are dropped (out-of-range scatter) and their
+            # reads clip, so they own no storage and can corrupt none
+            slot_tables = np.full((n_slots, nb), self.pool.n_blocks,
+                                  np.int32)
+            slot_rows = np.full((n_slots,), self.pool.n_rows, np.int32)
+            slot_run: list = [None] * n_slots      # owned (blocks, row)
+            cache = None
+        else:
+            cache = T.init_cache(self.cfg, n_slots, max_len)
+            cache = (jax.device_put(cache, self._cache_sh(cache))
+                     if self.mesh is not None
+                     else jax.tree.map(jnp.asarray, cache))
         if self.mesh is not None:
             # place the slot state by the activation rules up front: batch
             # on 'data', logits vocab on 'model', cache per cache_axes
-            cache = jax.device_put(cache, self._cache_sh(cache))
             cur = jax.device_put(cur, self._act_sh(cur.shape, ("act_batch",)))
             last = jax.device_put(last, self._act_sh(
                 last.shape, ("act_batch", "act_vocab")))
             pos = jax.device_put(pos, self._act_sh(pos.shape, ("act_batch",)))
-        else:
-            cache = jax.tree.map(jnp.asarray, cache)
         rng = jax.random.PRNGKey(seed)
-        insert = self._slot_insert()
+        insert = self._slot_insert() if not paged else None
 
         acc: dict[int, list] = {}       # rid -> [sum_h, sum_v, n]
         states: dict[int, SessionState] = {}    # rid -> extracted state
         pos0: dict[int, int] = {}       # slot -> position at admission
         results: list[dict] = []
-        extract = self._slot_extract()
+        extract = self._slot_extract() if not paged else None
 
         def drain():
             for req in batcher.drain_finished():
@@ -865,21 +1243,77 @@ class InferenceEngine:
                     out["state"] = states.pop(req.rid)
                 results.append(out)
 
+        promised = [0]          # slots admitted this round, not yet funded
+
+        def fits(r: Request) -> bool:
+            # admission asks the pool: a cold request needs a full run +
+            # a state row, a warm one at most a COW tail + the unshared
+            # remainder (bounded by the same) — be conservative.  admit()
+            # may fill several slots before the engine allocates, so count
+            # the slots already promised this round; the batcher admits a
+            # request exactly when its fits() returned True, so the
+            # increment below tracks admissions one-for-one.
+            ok = self.pool.can_alloc((promised[0] + 1) * nb,
+                                     promised[0] + 1)
+            if ok:
+                promised[0] += 1
+            return ok
+
         while not batcher.idle:
-            for i in batcher.admit():
+            promised[0] = 0
+            admitted = batcher.admit(fits=fits if paged else None)
+            if paged and not admitted and not batcher.active() \
+                    and batcher.queue:
+                # pool famine with nothing decoding: TTL-evict idle
+                # sessions to recover blocks — except the handles queued
+                # warm requests still reference — then retry once
+                if session_ttl_s is not None:
+                    keep = {r.state.cache.sid for r in batcher.queue
+                            if r.state is not None
+                            and isinstance(r.state.cache, PagedHandle)}
+                    self.pool.evict_idle(session_ttl_s, exclude=keep)
+                promised[0] = 0
+                admitted = batcher.admit(fits=fits)
+                if not admitted:
+                    raise RuntimeError(
+                        f"cache pool exhausted: {self.pool.blocks_in_use}/"
+                        f"{self.pool.n_blocks} blocks held by "
+                        f"{self.pool.live_sessions} sessions and no slot "
+                        "can admit — grow pool_blocks, release sessions, "
+                        "or pass session_ttl_s")
+            for i in admitted:
                 req = batcher.slots[i]
                 st = req.state
                 if st is not None:
-                    # warm admission: splice the session cache (grown to the
-                    # serve length) and continuation-prefill only the new
-                    # span — the conversation so far is NOT re-absorbed
                     self._check_state(st, extension=not req.prompt)
+                if paged:
+                    if st is not None:
+                        # warm admission: the slot's table row shares the
+                        # session's prefix blocks by reference (COW tail) —
+                        # the handle itself is untouched, so many requests
+                        # can fan out of one absorbed prefix
+                        run, row = self.pool.admit_row(
+                            st.cache, nb, int(np.asarray(st.pos)[0]))
+                    else:
+                        blocks, row = self.pool.alloc_run(nb)
+                        run = blocks
+                    slot_tables[i, :] = run
+                    slot_rows[i] = row
+                    slot_run[i] = (run, row)
+                    c1g = self._paged_dev_cache(slot_tables[i:i + 1],
+                                                slot_rows[i:i + 1])
+                elif st is not None:
                     c1g, _ = self._grown_cache(st, max_len)
+                if st is not None:
+                    # warm admission: continuation-prefill only the new
+                    # span — the conversation so far is NOT re-absorbed
                     if req.prompt:
                         p = np.asarray(req.prompt, np.int32)[None]
                         pb, s_orig = self._bucket_right(p)
                         self.counters["prefill_continue"] += 1
-                        c1, l1, k1 = _prefill_continue(
+                        fn = (_prefill_continue_paged if paged
+                              else _prefill_continue)
+                        c1, l1, k1 = fn(
                             self.params, self.cfg, jnp.asarray(pb),
                             jnp.int32(s_orig), st.pos, c1g,
                             mesh=self.mesh, rules=self.rules)
@@ -892,12 +1326,26 @@ class InferenceEngine:
                     p = np.asarray(req.prompt, np.int32)[None]
                     pb, s_orig = self._bucket(p)
                     self.counters["prefill"] += 1
-                    c1, l1, k1 = _prefill_absorb(
-                        self.params, self.cfg, jnp.asarray(pb),
-                        jnp.int32(s_orig), max_len,
-                        mesh=self.mesh, rules=self.rules)
+                    if paged:
+                        c1, l1, k1 = _prefill_into_paged(
+                            self.params, self.cfg, jnp.asarray(pb),
+                            jnp.int32(s_orig),
+                            self._paged_dev_cache(slot_tables[i:i + 1],
+                                                  slot_rows[i:i + 1]),
+                            mesh=self.mesh, rules=self.rules)
+                    else:
+                        c1, l1, k1 = _prefill_absorb(
+                            self.params, self.cfg, jnp.asarray(pb),
+                            jnp.int32(s_orig), max_len,
+                            mesh=self.mesh, rules=self.rules)
                     p0 = s_orig
-                cache = insert(cache, k1, i)
+                if paged:
+                    # admission prefilled straight into the slot's pool
+                    # blocks — commit the pool, nothing to splice
+                    if T.is_paged(k1):
+                        self.pool.commit(k1["layers"])
+                else:
+                    cache = insert(cache, k1, i)
                 cur = cur.at[i].set(c1[0])
                 last = last.at[i].set(l1[0])
                 pos = pos.at[i].set(p0)
@@ -912,16 +1360,23 @@ class InferenceEngine:
             chunk = min([int(decode_chunk)] +
                         [r.max_new - len(r.generated)
                          for _, r in batcher.active() if r.return_state])
-            if self.mesh is not None:
+            if paged:
+                cache = self._paged_dev_cache(slot_tables, slot_rows)
+                toks, _, h_per, v_per, carry = _decode_scan_paged(
+                    self.params, self.cfg, cur, last, cache, pos, rng,
+                    self.ucfg, chunk, bool(greedy),
+                    with_logits=False, mesh=self.mesh, rules=self.rules)
+            elif self.mesh is not None:
                 toks, h_per, v_per, carry = self._decode_sharded(
                     n_slots, max_len, chunk, bool(greedy))(
                         self.params, cur, last, cache, pos, rng)
             else:
                 toks, _, h_per, v_per, carry = _decode_scan(
                     self.params, self.cfg, cur, last, cache, pos, rng,
-                    self.ucfg, chunk, bool(greedy),
-                    with_logits=False)
+                    self.ucfg, chunk, bool(greedy), with_logits=False)
             cur, last, cache, pos, rng = carry
+            if paged:
+                self.pool.commit(cache["layers"])
             toks_np = np.asarray(toks)
             h_np, v_np = np.asarray(h_per), np.asarray(v_per)
 
@@ -942,18 +1397,40 @@ class InferenceEngine:
                         retired_at.setdefault(req.rid, t)
             for req in batcher.finished:        # retired this chunk
                 i = slot_of.get(req.rid)
-                if not req.return_state or req.rid in states or i is None:
+                if i is None:
                     continue
+                want_state = req.return_state and req.rid not in states
                 # a request whose last step is the chunk's last step (the
                 # clamp guarantees this for max_new retirement) is captured
                 # exactly; a stop-token retirement mid-chunk left the slot
                 # decoding garbage -> the handle is marked inexact and only
                 # supports continuation prefill on attention-only models
                 end = pos0[i] + len(req.generated)
-                states[req.rid] = SessionState(
-                    extract(cache, i), jnp.full((1,), end, jnp.int32),
-                    cur[i:i + 1], last[i:i + 1], max_len, end,
-                    exact=retired_at.get(req.rid) == chunk - 1)
+                exact = retired_at.get(req.rid) == chunk - 1
+                if paged and slot_run[i] is not None:
+                    blocks, row = slot_run[i]
+                    if want_state:
+                        # hand-back = table adoption, trimmed to the
+                        # covered blocks — no cache extraction copy
+                        handle = self.pool.adopt(
+                            blocks, row, -(-end // self.block_len))
+                        states[req.rid] = SessionState(
+                            handle, jnp.full((1,), end, jnp.int32),
+                            cur[i:i + 1], last[i:i + 1], max_len, end,
+                            exact=exact)
+                    else:
+                        self.pool.free_blocks(blocks)
+                        self.pool.free_rows(np.array([row]))
+                    # repoint the slot at the sentinels: its garbage decode
+                    # keeps running but writes are dropped from here on
+                    slot_tables[i, :] = self.pool.n_blocks
+                    slot_rows[i] = self.pool.n_rows
+                    slot_run[i] = None
+                elif want_state:
+                    states[req.rid] = SessionState(
+                        extract(cache, i), jnp.full((1,), end, jnp.int32),
+                        cur[i:i + 1], last[i:i + 1], max_len, end,
+                        exact=exact)
             drain()
         drain()
         return results

@@ -47,14 +47,28 @@ class Request:
     done: bool = False
     # warm-cache session handle (serving/engine.py::SessionState): admission
     # splices the live cache into the slot and continuation-prefills only
-    # ``prompt`` instead of re-absorbing the whole conversation
+    # ``prompt`` instead of re-absorbing the whole conversation.  On a
+    # paged engine, MANY queued requests may carry the SAME absorbed handle
+    # — each admission is a refcounted block-table copy off it (COW tail),
+    # fanning one prefilled prefix out across slots.
     state: object | None = None
     # hand back this request's SessionState at retirement (multi-turn serve)
     return_state: bool = False
+    # admission ordering (multi-tenant serve): earliest deadline first,
+    # then lowest priority value; FIFO among equals.  deadline_ms is an
+    # absolute caller-defined clock (only compared between requests).
+    priority: int = 0
+    deadline_ms: float | None = None
 
 
 class ContinuousBatcher:
-    """Iteration-level scheduler over a fixed number of decode slots."""
+    """Iteration-level scheduler over a fixed number of decode slots.
+
+    Admission is deadline/priority-aware: the queue is drained earliest-
+    ``deadline_ms`` first (requests without a deadline sort last), ties
+    broken by ascending ``priority`` and then submit order — a tight-
+    deadline request submitted late preempts the queue for the next free
+    slot (it never preempts a request already decoding in a slot)."""
 
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
@@ -65,12 +79,26 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def admit(self) -> list[int]:
-        """Fill free slots from the queue; returns newly admitted slot ids."""
+    @staticmethod
+    def _urgency(r: Request) -> tuple:
+        return (r.deadline_ms if r.deadline_ms is not None else float("inf"),
+                r.priority)
+
+    def admit(self, fits=None) -> list[int]:
+        """Fill free slots from the queue in earliest-deadline-then-priority
+        order; returns newly admitted slot ids.  ``fits`` (optional
+        predicate) lets the cache pool veto admissions that cannot get
+        blocks yet — vetoed requests stay queued, in order, and are retried
+        once retirements free resources."""
         admitted = []
         for i in range(self.n_slots):
             if self.slots[i] is None and self.queue:
-                self.slots[i] = self.queue.pop(0)
+                self.queue.sort(key=self._urgency)    # stable: FIFO ties
+                j = next((jj for jj, r in enumerate(self.queue)
+                          if fits is None or fits(r)), None)
+                if j is None:
+                    break
+                self.slots[i] = self.queue.pop(j)
                 admitted.append(i)
         return admitted
 

@@ -99,6 +99,10 @@ class SwarmExecutor:
         deepening), the member *extends* its generation decode-only from
         the live cache instead of re-prefilling the prompt, and u is
         re-averaged over the full span from the provided raw Eq. 2-3 means.
+        On a paged member the handoff the gateway builds (``state_select``)
+        is a refcounted block-TABLE copy — O(table), not O(cache) — and
+        the extension's first write copy-on-writes the shared tail block
+        (docs/RUNTIME.md "Paged caches & prefix sharing").
 
         Returns ``{"answers": (B, n, N) per-member tokens, "u": (B, n)
         Eq. 4 difficulties, "winner_tokens": (B, N), "winner_member":
