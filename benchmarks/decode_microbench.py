@@ -1,0 +1,219 @@
+"""Per-phase decode microbench: kernel-first vs gathered-view paged serving.
+
+Breaks one serving session into its three phases and times each under both
+paged decode-attention impls (``attn_decode_impl`` in
+``repro.serving.engine``):
+
+* ``prefill``             — cold absorb of the context into pool blocks;
+* ``continuation_insert`` — warm continuation prefill of a short span over
+                            the live cache (multi-turn / swarm handoff);
+* ``decode_step``         — per-token cost of a scanned decode dispatch
+                            (the serving inner loop, reported per step).
+
+Each row also carries an estimated bytes-moved figure and its HBM roofline
+join against ``benchmarks/roofline.py``'s hardware model (time the bytes
+would take at ``HBM_BW``, and that model time as a fraction of measured
+wall-clock — meaningful on TPU; on CPU the fraction is only a shape-level
+sanity signal).  Byte estimates count the dominant streams — parameter
+bytes + the slot-linear attention KV view per decode step, measured from
+the engine's actual cache shapes via ``jax.eval_shape`` — not every
+activation.
+
+The harness is also the enforcement point for the kernel-first claims:
+
+* ``--check-hlo``       — assert (via ``repro.serving.hlo_probe``) that the
+                          kernel-first decode executable does NOT
+                          materialise the O(B * S) slot-linear KV view the
+                          gathered-view executable provably carries;
+* ``--assert-ratio X``  — fail unless kernel-first decode-step wall-clock
+                          is <= X * gathered-view (CI floor: 1.0);
+* ``--profile DIR``     — wrap one timed pass of each phase in a
+                          ``jax.profiler`` trace for offline inspection;
+* ``--compilation-cache-dir`` — engine-level persistent XLA cache, so a
+                          re-run skips every already-seen jit.
+
+Usage (CI smoke): PYTHONPATH=src python benchmarks/decode_microbench.py \
+    --ctx 200 --steps 16 --check-hlo --assert-ratio 1.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "benchmarks")
+
+from roofline import HBM_BW  # noqa: E402
+
+
+def best_of(fn, iters: int, warmup: int = 3) -> float:
+    """Min-of-N seconds per call (min, not mean: immune to load spikes,
+    which is what a CI floor needs)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tree_bytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
+def view_bytes(cfg, cache: dict, block_len: int) -> int:
+    """Bytes of the slot-linear attention KV view for this cache — the
+    per-decode-step attention read stream (both impls stream exactly these
+    elements; the gather impl additionally materialises them per dispatch)."""
+    from repro.models import transformer as T
+    view_lens = {cache["table"].shape[1] * block_len}
+    if cfg.window is not None:
+        view_lens.add(cfg.window)
+    gathered = jax.eval_shape(lambda c: T.paged_gather(cfg, c), cache)
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(gathered)
+               if leaf.ndim >= 4 and leaf.shape[-3] in view_lens)
+
+
+def build_engine(args, impl: str):
+    from repro import configs as C
+    from repro.core.uncertainty import UncertaintyConfig
+    from repro.models import transformer as T
+    from repro.serving.engine import InferenceEngine
+    cfg = dataclasses.replace(C.get_smoke(args.arch), vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(
+        f"microbench-{impl}", cfg, params,
+        UncertaintyConfig(mode="distribution"), paged=True,
+        block_len=args.block_len, pool_blocks=args.pool_blocks,
+        max_len=args.ctx + args.steps + 32, attn_decode_impl=impl,
+        compilation_cache_dir=args.compilation_cache_dir)
+    return eng
+
+
+def bench_impl(args, impl: str, prompts, span) -> dict[str, dict]:
+    eng = build_engine(args, impl)
+    B = args.batch
+    p_bytes = tree_bytes(eng.params)
+
+    # warm state shared by the insert/decode phases
+    st = eng.absorb(prompts)
+    cache, _ = eng._paged_grown(st, st.offset + args.steps)
+    v_bytes = view_bytes(eng.cfg, cache, eng.block_len)
+    kv_write = v_bytes * args.ctx // cache["table"].shape[1] // eng.block_len
+
+    def run_prefill():
+        s = eng.absorb(prompts)
+        eng.release(s)
+
+    def run_insert():
+        eng.generate(span, 1, state=st)
+
+    def run_decode():
+        eng.generate(None, args.steps, state=st)
+
+    phases = {
+        # cold prefill streams the params once and writes the context KV
+        "prefill": (run_prefill, p_bytes + kv_write, 1),
+        # continuation prefill: params once + one pass over the live view
+        "continuation_insert": (run_insert, p_bytes + v_bytes, 1),
+        # each decode step streams params + the live attention KV; the
+        # gather impl ALSO materialises + scatters the view per dispatch
+        "decode_step": (run_decode,
+                        args.steps * (p_bytes + v_bytes)
+                        + (3 * v_bytes if impl == "gather" else 0),
+                        args.steps),
+    }
+    out = {}
+    for name, (fn, nbytes, per) in phases.items():
+        sec = best_of(fn, args.iters)
+        if args.profile:
+            with jax.profiler.trace(f"{args.profile}/{impl}_{name}"):
+                fn()
+        model_sec = nbytes / HBM_BW
+        out[name] = {
+            "ms": sec / per * 1e3,
+            "est_mb": nbytes / per / 1e6,
+            "hbm_model_ms": model_sec / per * 1e3,
+            "hbm_frac": model_sec / sec if sec else 0.0,
+        }
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ctx", type=int, default=200,
+                    help="live context length before the timed phases")
+    ap.add_argument("--span", type=int, default=8,
+                    help="continuation-insert span length")
+    ap.add_argument("--steps", type=int, default=16,
+                    help="decode steps per dispatch")
+    ap.add_argument("--block-len", type=int, default=32)
+    ap.add_argument("--pool-blocks", type=int, default=512)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="write a jax.profiler trace per phase under DIR")
+    ap.add_argument("--check-hlo", action="store_true",
+                    help="assert the kernel-first decode executable drops "
+                         "the slot-linear KV view")
+    ap.add_argument("--assert-ratio", type=float, default=None, metavar="X",
+                    help="fail unless kernel decode_step <= X * gather")
+    ap.add_argument("--compilation-cache-dir", default=None)
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(7, 500, size=(args.batch, args.ctx)).astype(
+        np.int32)
+    span = rng.integers(7, 500, size=(args.batch, args.span)).astype(np.int32)
+
+    results = {impl: bench_impl(args, impl, prompts, span)
+               for impl in ("kernel", "gather")}
+
+    hdr = (f"{'phase':<22}{'impl':<8}{'ms/call':>10}{'est MB':>10}"
+           f"{'HBM-model ms':>14}{'frac':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name in ("prefill", "continuation_insert", "decode_step"):
+        for impl in ("kernel", "gather"):
+            r = results[impl][name]
+            print(f"{name:<22}{impl:<8}{r['ms']:>10.3f}{r['est_mb']:>10.2f}"
+                  f"{r['hbm_model_ms']:>14.4f}{r['hbm_frac']:>8.3f}")
+    ratio = (results["kernel"]["decode_step"]["ms"]
+             / results["gather"]["decode_step"]["ms"])
+    print(f"\nkernel_vs_gather_paged_decode: {ratio:.3f} "
+          f"(kernel decode-step / gather decode-step; <1 = kernel faster)")
+
+    failed = False
+    if args.check_hlo:
+        from repro.serving.hlo_probe import assert_no_slot_linear_kv
+        try:
+            acct = assert_no_slot_linear_kv(
+                build_engine(args, "gather"), build_engine(args, "kernel"),
+                prompts[:, -16:], steps=4)
+            print(f"hlo_check: OK — gather carries {acct['in_gather_hlo']}, "
+                  f"kernel-first drops all of it")
+        except AssertionError as e:
+            print(f"hlo_check: FAIL — {e}")
+            failed = True
+    if args.assert_ratio is not None:
+        ok = ratio <= args.assert_ratio
+        print(f"ratio_floor: {'OK' if ok else 'FAIL'} "
+              f"({ratio:.3f} vs <= {args.assert_ratio})")
+        failed |= not ok
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,15 @@ def bench_all() -> list[tuple[str, float, float]]:
     us = _time(jax.jit(lambda a, b, c: flash_attention_ref(a, b, c)), q, k, v)
     rows.append(("flash_attention_ref_s256", us, 256))
 
+    # ...and the Pallas kernel on the same shapes (compiled on TPU;
+    # interpret-mode elsewhere, hence the low iteration count — the row
+    # tracks kernel-vs-ref side by side so a TPU run shows the real win)
+    from repro.kernels.flash_attention.ops import flash_attention
+    on_tpu = jax.default_backend() == "tpu"
+    us_k = _time(lambda a, b, c: flash_attention(a, b, c, force_pallas=True),
+                 q, k, v, iters=20 if on_tpu else 2, warmup=3 if on_tpu else 1)
+    rows.append(("flash_attention_kernel_s256", us_k, 256))
+
     # smoke-model decode step (serving inner loop)
     from repro import configs as C
     from repro.models import transformer as T
@@ -198,6 +207,24 @@ def bench_all() -> list[tuple[str, float, float]]:
     rows.append(("decode_extend_paged_b4_n16", us_dp, 4))
     rows.append(("paged_vs_monolithic_decode", us_dp,
                  round(us_dm / us_dp, 3)))
+
+    # kernel-first vs gathered-view paged decode (ISSUE 6 tentpole).
+    # eng_pg above runs the kernel-first default (in-place block-table
+    # reads); the oracle engine gathers the slot-linear view per dispatch.
+    # Bitwise-identical outputs — this row is purely the perf delta, and
+    # benchmarks/decode_microbench.py breaks the same comparison down per
+    # phase with bytes-moved and roofline fractions.
+    eng_gv = InferenceEngine("bench-gather", cfg_m, params, max_len=64,
+                             paged=True, block_len=32, pool_blocks=512,
+                             attn_decode_impl="gather")
+    st_gv = eng_gv.absorb(ctx)
+
+    def _dec_gather():
+        return eng_gv.generate(None, 16, state=st_gv)["tokens"]
+    us_dg = _time(_dec_gather, iters=20, warmup=3)
+    rows.append(("decode_extend_gather_b4_n16", us_dg, 4))
+    rows.append(("kernel_vs_gather_paged_decode", us_dp,
+                 round(us_dg / us_dp, 3)))
 
     sys_prompt = rngp.randint(7, cfg_m.vocab_size,
                               size=(1, 448)).astype(np.int32)

@@ -21,10 +21,16 @@ prompt fanned out to many sessions by copy-on-write block tables — one
 prefill total — verified against per-session cold prefills and timed.
 
   PYTHONPATH=src python examples/chat_session.py --shared-system-prompt
+
+``--attn-decode-impl {kernel,gather}`` selects the paged engine's decode-
+attention path (default: measured-best per backend — the in-place
+block-table kernel; see docs/RUNTIME.md "Kernel-first decode") and
+``--compilation-cache-dir DIR`` persists every XLA executable so a re-run
+of this script skips all compilation.
 """
 
+import argparse
 import dataclasses
-import sys
 import time
 
 import jax
@@ -36,8 +42,17 @@ from repro.serving.engine import InferenceEngine
 from repro.serving.scheduler import Request
 from repro.serving.swarm import pad_prompts
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--shared-system-prompt", action="store_true")
+ap.add_argument("--attn-decode-impl", choices=("kernel", "gather"),
+                default=None)
+ap.add_argument("--compilation-cache-dir", default=None)
+args = ap.parse_args()
+
 cfg = dataclasses.replace(C.get_smoke("smollm-135m"), vocab_size=512)
-eng = InferenceEngine("chat", cfg, params=T.init_params(cfg, jax.random.PRNGKey(0)))
+eng = InferenceEngine("chat", cfg,
+                      params=T.init_params(cfg, jax.random.PRNGKey(0)),
+                      compilation_cache_dir=args.compilation_cache_dir)
 
 rng = np.random.RandomState(7)
 MAX_NEW = 8
@@ -100,10 +115,12 @@ print(f"3 follow-up turns on a {long_ctx.shape[1]}-token context: "
       f"({cold_s/warm_s:.1f}x)")
 
 # --- 4. (--shared-system-prompt) paged COW fan-out of one absorbed prefix --
-if "--shared-system-prompt" in sys.argv:
+if args.shared_system_prompt:
     N_SESS = 8
     paged = InferenceEngine("chat-paged", cfg, params=eng.params,
-                            paged=True, block_len=32, pool_blocks=512)
+                            paged=True, block_len=32, pool_blocks=512,
+                            attn_decode_impl=args.attn_decode_impl,
+                            compilation_cache_dir=args.compilation_cache_dir)
     sys_prompt = rng.randint(7, cfg.vocab_size, size=(1, 448)).astype(np.int32)
 
     def shared():

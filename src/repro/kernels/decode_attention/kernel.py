@@ -61,53 +61,152 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, idx_ref, o_ref,
 
 
 def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, idx_ref,
-                         o_ref, m_ref, l_ref, acc_ref, *, bt: int, nt: int,
-                         window: int | None, scale: float):
-    """Same streaming-softmax body as ``_decode_kernel`` — the block table
-    only changes WHERE each KV tile comes from (the BlockSpec index maps
-    read ``tbl_ref``), not the math.  ``tbl_ref`` is scalar-prefetched so
-    the DMA addresses are known before the body runs."""
-    del tbl_ref
-    _decode_kernel(q_ref, k_ref, v_ref, pos_ref, idx_ref, o_ref,
-                   m_ref, l_ref, acc_ref, bt=bt, nt=nt, window=window,
-                   scale=scale)
+                         p0_ref, dk_ref, dv_ref, dpos_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, L: int, nb: int,
+                         window: int | None, scale: float, n_blocks: int,
+                         ring: bool):
+    """Streaming-softmax body over a slot's pool blocks plus the dispatch's
+    delta write buffer.
+
+    Grid (B, K, nb + 1): steps ``t < nb`` stream pool block ``table[b, t]``
+    (the BlockSpec index maps dereference the scalar-prefetched table, so
+    the DMA address is known before the body runs); the final step attends
+    the delta rows — this dispatch's own decode writes, which never touch
+    the pool mid-scan — and emits.  Pool-side masks: cached-position
+    validity (pos in [0, idx], window), sentinel table entries
+    (``table[b, t] >= n_blocks`` kills the whole block; its DMA is clamped
+    to a real block and the data discarded), and *covered* slots — slots
+    this dispatch has rewritten, whose live value is the delta row (for
+    ring layers the pre-wrap value can still pass the window test when the
+    view is shorter than the window, so position masking alone is not
+    enough).  Delta-side masks: unwritten rows (pos -1), future rows
+    (pos > idx), and for ring layers rows superseded in-ring by a later
+    write to the same slot (pos <= idx - ring length)."""
+    b = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    idx = idx_ref[0]                                  # () current position
+    p0 = p0_ref[0]                                    # () dispatch start
+    ring_len = nb * L
+
+    def update(k, v, valid):
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_old, l_old = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_old, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_old - m_new)
+        l_ref[...] = l_old * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(t < nb)
+    def _pool_block():
+        k = k_ref[0, :, 0, :].astype(jnp.float32)    # (L, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        pos = pos_ref[0]                              # (L,) cached abs pos
+        valid = (pos >= 0) & (pos <= idx)
+        if window is not None:
+            valid &= idx - pos < window
+        valid &= tbl_ref[b, t] < n_blocks            # sentinel entry
+        sl = t * L + jax.lax.broadcasted_iota(jnp.int32, (L,), 0)
+        if ring:
+            covered = (sl - p0) % ring_len <= idx - p0
+        else:
+            covered = (sl >= p0) & (sl <= idx)
+        update(k, v, valid & ~covered)
+
+    @pl.when(t == nb)
+    def _delta():
+        k = dk_ref[0, :, 0, :].astype(jnp.float32)   # (S, D)
+        v = dv_ref[0, :, 0, :].astype(jnp.float32)
+        dpos = dpos_ref[0]                            # (S,) -1 = unwritten
+        valid = (dpos >= 0) & (dpos <= idx)
+        if window is not None:
+            valid &= idx - dpos < window
+        if ring:
+            valid &= dpos > idx - ring_len           # superseded in-ring
+        update(k, v, valid)
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
 def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
                                   v_pool: jax.Array, pos_pool: jax.Array,
                                   table: jax.Array, index: jax.Array, *,
                                   window: int | None = None,
+                                  delta_k: jax.Array | None = None,
+                                  delta_v: jax.Array | None = None,
+                                  delta_pos: jax.Array | None = None,
+                                  p0: jax.Array | None = None,
                                   interpret: bool = True) -> jax.Array:
     """Paged-cache decode attention: the KV cache lives in a block pool
     (``k_pool``/``v_pool`` (N, L, K, D), ``pos_pool`` (N, L)) and each
     batch row reads it through a block table (B, nb) of pool block ids.
 
-    The grid iterates (B, K, nb) with the cache-block dim innermost, and
-    the k/v/pos BlockSpec index maps dereference the scalar-prefetched
+    The grid iterates (B, K, nb + 1) with the cache-block dim innermost,
+    and the k/v/pos BlockSpec index maps dereference the scalar-prefetched
     table — ``table[b, t]`` picks the pool block to DMA — so the kernel
     streams exactly the slot's blocks through VMEM once per (batch,
     kv-head) pair, never materialising the gathered linear view the XLA
-    path (``models.attention.paged_view``) builds.  Empty/invalid entries
-    are masked by the pooled positions (pos = -1), identical to the
-    monolithic kernel.
-    """
+    path (``models.attention.paged_view``) builds.  Sentinel table entries
+    (>= N, empty serve slots) are masked out wholesale; their DMA address
+    is clamped in-range and the data discarded.
+
+    ``delta_k``/``delta_v`` (B, S, K, D), ``delta_pos`` (B, S) and ``p0``
+    (B,) carry the current dispatch's own decode writes (see
+    ``models.attention.init_decode_delta``): the last grid step attends
+    them, and pool slots the dispatch has rewritten — linear slots
+    [p0, idx], ring slots for ``window`` layers, where the table is
+    expected to be pre-sliced to the window so the ring length is the view
+    length nb*L — are masked from the pool-side read.  Omitting the delta
+    operands degrades to pure pool attention (a masked 1-row dummy rides
+    the last grid step)."""
     B, K, G, D = q.shape
     N, L = k_pool.shape[0], k_pool.shape[1]
     nb = table.shape[1]
-    grid = (B, K, nb)
-    kern = functools.partial(_paged_decode_kernel, bt=L, nt=nb,
-                             window=window, scale=D ** -0.5)
+    if delta_k is None:
+        delta_k = jnp.zeros((B, 1, K, D), k_pool.dtype)
+        delta_v = jnp.zeros((B, 1, K, D), v_pool.dtype)
+        delta_pos = jnp.full((B, 1), -1, jnp.int32)
+        p0 = index + 1                   # covers nothing, masks nothing
+    S = delta_pos.shape[1]
+    grid = (B, K, nb + 1)
+    kern = functools.partial(_paged_decode_kernel, L=L, nb=nb,
+                             window=window, scale=D ** -0.5, n_blocks=N,
+                             ring=window is not None)
+
+    def blk(b, h, t, tbl):
+        # clamp: the delta step (t == nb) and sentinel entries still need an
+        # in-range DMA address; their data is masked in the body
+        return (jnp.minimum(tbl[b, jnp.minimum(t, nb - 1)], N - 1), 0, h, 0)
+
+    def blk_pos(b, h, t, tbl):
+        return (jnp.minimum(tbl[b, jnp.minimum(t, nb - 1)], N - 1), 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,            # the block table
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((1, L, 1, D),
-                         lambda b, h, t, tbl: (tbl[b, t], 0, h, 0)),
-            pl.BlockSpec((1, L, 1, D),
-                         lambda b, h, t, tbl: (tbl[b, t], 0, h, 0)),
-            pl.BlockSpec((1, L), lambda b, h, t, tbl: (tbl[b, t], 0)),
+            pl.BlockSpec((1, L, 1, D), blk),
+            pl.BlockSpec((1, L, 1, D), blk),
+            pl.BlockSpec((1, L), blk_pos),
             pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
+            pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
+            pl.BlockSpec((1, S, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
+            pl.BlockSpec((1, S), lambda b, h, t, tbl: (b, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -121,7 +220,8 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,
-    )(table, q.reshape(B, K, G, D), k_pool, v_pool, pos_pool, index)
+    )(table, q.reshape(B, K, G, D), k_pool, v_pool, pos_pool, index, p0,
+      delta_k, delta_v, delta_pos)
 
 
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,

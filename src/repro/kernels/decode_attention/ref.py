@@ -21,17 +21,40 @@ def decode_attention_ref(q, k, v, pos, index, *, window=None):
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table, index, *,
-                               window=None):
+                               window=None, delta_k=None, delta_v=None,
+                               delta_pos=None, p0=None):
     """Block-table oracle: gather the slot-linear view of the pool
     (k_pool/v_pool (N,L,K,D), pos_pool (N,L), table (B,nb)) and run the
     monolithic reference over it — the same view the serving path's
-    ``models.attention.paged_view`` assembles."""
+    ``models.attention.paged_view`` assembles.  Sentinel table entries
+    (>= N) mask their whole block.  With the delta operands set
+    (``delta_k``/``delta_v`` (B,S,K,D), ``delta_pos`` (B,S), ``p0`` (B,)),
+    pool slots the dispatch rewrote — linear slots [p0, index], ring slots
+    mod the view length for ``window`` layers — are masked and the delta
+    rows are appended to the attended set instead (unwritten / future /
+    in-ring-superseded rows masked), mirroring the kernel's two-phase
+    read."""
     B, nb = table.shape
-    L = k_pool.shape[1]
+    N, L = k_pool.shape[0], k_pool.shape[1]
     flat = table.reshape(-1)
     k = jnp.take(k_pool, flat, axis=0, mode="clip").reshape(
         B, nb * L, *k_pool.shape[2:])
     v = jnp.take(v_pool, flat, axis=0, mode="clip").reshape(
         B, nb * L, *v_pool.shape[2:])
     pos = jnp.take(pos_pool, flat, axis=0, mode="clip").reshape(B, nb * L)
+    pos = jnp.where(jnp.repeat(table < N, L, axis=1), pos, -1)
+    if delta_k is not None:
+        Tl = nb * L
+        sl = jnp.arange(Tl, dtype=jnp.int32)[None]
+        if window is not None:
+            covered = (sl - p0[:, None]) % Tl <= (index - p0)[:, None]
+        else:
+            covered = (sl >= p0[:, None]) & (sl <= index[:, None])
+        pos = jnp.where(covered, -1, pos)
+        dvalid = delta_pos <= index[:, None]
+        if window is not None:
+            dvalid &= delta_pos > index[:, None] - Tl    # superseded in-ring
+        k = jnp.concatenate([k, delta_k.astype(k.dtype)], axis=1)
+        v = jnp.concatenate([v, delta_v.astype(v.dtype)], axis=1)
+        pos = jnp.concatenate([pos, jnp.where(dvalid, delta_pos, -1)], axis=1)
     return decode_attention_ref(q, k, v, pos, index, window=window)

@@ -76,6 +76,95 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
 
 
+def _flash_positions_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                            m_ref, l_ref, acc_ref, *, bq: int, bk: int,
+                            nk: int, causal: bool, window: int | None,
+                            scale: float):
+    """Positions-mode flash body: the causal/window masks come from explicit
+    per-token position operands instead of grid offsets, so the kernel can
+    attend a span over a whole live cache (continuation prefill: cache slots
+    carry absolute positions, -1 = empty) or over ring layouts where slot
+    order is not position order.  No block skipping — validity is dynamic,
+    every KV block is visited and masked."""
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0]                                   # (bq,) abs positions
+    kp = kp_ref[0]                                   # (bk,) -1 = empty slot
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = jnp.broadcast_to((kp >= 0)[None, :], (bq, bk))
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        mask &= qp[:, None] - kp[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old, l_old = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_old, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_old - m_new)
+    l_ref[...] = l_old * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention_positions_pallas(q: jax.Array, k: jax.Array,
+                                     v: jax.Array, *, q_positions: jax.Array,
+                                     kv_positions: jax.Array,
+                                     causal: bool = True,
+                                     window: int | None = None,
+                                     bq: int = 256, bk: int = 256,
+                                     interpret: bool = True) -> jax.Array:
+    """q (B,S,H,D); k,v (B,T,K,D); q_positions (S,), kv_positions (T,)
+    absolute positions shared across the batch (negative = inert padding /
+    empty cache slot).  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    grid = (B, H, S // bq, T // bk)
+    kern = functools.partial(
+        _flash_positions_kernel, bq=bq, bk=bk, nk=T // bk, causal=causal,
+        window=window, scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (0, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_positions.reshape(1, S).astype(jnp.int32),
+      kv_positions.reshape(1, T).astype(jnp.int32))
+
+
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int | None = None,
                            bq: int = 256, bk: int = 256,

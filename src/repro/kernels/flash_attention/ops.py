@@ -19,3 +19,21 @@ def flash_attention(q, k, v, *, causal=True, window=None, bq=256, bk=256,
             q, k, v, causal=causal, window=window, bq=bq, bk=bk,
             interpret=jax.default_backend() != "tpu")
     return R.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "force_pallas"))
+def flash_attention_positions(q, k, v, *, q_positions, kv_positions,
+                              causal=True, window=None, bq=256, bk=256,
+                              force_pallas=False):
+    """Positions-mode flash attention: masks from explicit per-token
+    positions (negative = padding / empty cache slot), so a span can attend
+    over a whole live cache — the serving prefill's continuation case."""
+    if jax.default_backend() == "tpu" or force_pallas:
+        return K.flash_attention_positions_pallas(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, window=window, bq=bq, bk=bk,
+            interpret=jax.default_backend() != "tpu")
+    return R.flash_attention_positions_ref(
+        q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+        causal=causal, window=window)

@@ -23,3 +23,24 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
     return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def flash_attention_positions_ref(q, k, v, *, q_positions, kv_positions,
+                                  causal=True, window=None):
+    """Positions-mode oracle: masks from explicit per-token positions
+    (q_positions (S,), kv_positions (T,); negative = padding / empty slot),
+    the same mask set the serving prefill uses (``models.attention``)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qr = q.reshape(B, S, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32)) * D ** -0.5
+    mask = jnp.broadcast_to((kv_positions >= 0)[None, :], (S, T))
+    if causal:
+        mask &= q_positions[:, None] >= kv_positions[None, :]
+    if window is not None:
+        mask &= q_positions[:, None] - kv_positions[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -92,14 +92,20 @@ def build_gateway(train_steps: int = 150, quorum: int | None = None,
                   router_cfg: RouterConfig | None = None,
                   budget_total: float = 1.0, seed: int = 0,
                   world: FactWorld | None = None,
-                  calibrate: bool = True, mesh=None):
+                  calibrate: bool = True, mesh=None,
+                  engine_kw: dict | None = None):
     """Construct the full three-tier system (returns gateway + baselines).
 
     ``mesh`` (a ``launch.mesh.serving_mesh()`` (data, model) mesh) places
     every tier's engine on the mesh: greedy routing decisions and tokens
     are identical to the single-device gateway, but prefill/decode run
     SPMD-partitioned (see docs/SHARDING.md).
+
+    ``engine_kw`` is forwarded to every tier's :class:`InferenceEngine`
+    (e.g. ``paged=True``, ``attn_decode_impl=...``,
+    ``compilation_cache_dir=...`` — see ``main()``'s flags).
     """
+    engine_kw = engine_kw or {}
     # a compact fact world so the smoke-scale tiers genuinely memorise it
     world = world or FactWorld(n_ent=16, n_rel=6)
     ucfg = UncertaintyConfig(alpha=1.0, mode="distribution")
@@ -118,11 +124,14 @@ def build_gateway(train_steps: int = 150, quorum: int | None = None,
                             world=world)
 
     probe = InferenceEngine("probe-smollm", probe_cfg, probe_p, ucfg,
-                            mesh=mesh)
+                            mesh=mesh, **engine_kw)
     peers = [probe,
-             InferenceEngine("edge-1b", e2_cfg, e2_p, ucfg, mesh=mesh),
-             InferenceEngine("edge-qwen", e3_cfg, e3_p, ucfg, mesh=mesh)]
-    cloud = InferenceEngine("cloud-fm", fm_cfg, fm_p, ucfg, mesh=mesh)
+             InferenceEngine("edge-1b", e2_cfg, e2_p, ucfg, mesh=mesh,
+                             **engine_kw),
+             InferenceEngine("edge-qwen", e3_cfg, e3_p, ucfg, mesh=mesh,
+                             **engine_kw)]
+    cloud = InferenceEngine("cloud-fm", fm_cfg, fm_p, ucfg, mesh=mesh,
+                            **engine_kw)
     scfg, sparams = train_safety()
 
     rcfg = router_cfg or RouterConfig(tau_low=0.08, tau_high=0.22, sigma=0.7,
@@ -152,6 +161,17 @@ def main():
                     help="serve on a (data, model) mesh over the live "
                          "devices with this much tensor parallelism "
                          "(0 = single-device engines)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve every tier off the paged block-pool cache "
+                         "(docs/RUNTIME.md 'Paged caches & prefix sharing')")
+    ap.add_argument("--attn-decode-impl", choices=("kernel", "gather"),
+                    default=None,
+                    help="paged decode-attention impl (implies --paged); "
+                         "default: measured-best per backend — see "
+                         "docs/RUNTIME.md 'Kernel-first decode'")
+    ap.add_argument("--compilation-cache-dir", default=None,
+                    help="persistent XLA compilation cache directory: a "
+                         "relaunched gateway skips every already-seen jit")
     args = ap.parse_args()
 
     mesh = None
@@ -159,9 +179,18 @@ def main():
         from repro.launch.mesh import serving_mesh
         mesh = serving_mesh(model_parallel=args.model_parallel)
         print(f"[serve] mesh {dict(mesh.shape)}")
+    engine_kw = {}
+    if args.paged or args.attn_decode_impl is not None:
+        # the study workload batches ~50 queries through each tier, well
+        # past the default pool sizing (16 full-length sessions) — give
+        # the gateway engines headroom for the full workload batch
+        engine_kw.update(paged=True, pool_blocks=1024,
+                         attn_decode_impl=args.attn_decode_impl)
+    if args.compilation_cache_dir is not None:
+        engine_kw["compilation_cache_dir"] = args.compilation_cache_dir
     gw, probe, cloud, world = build_gateway(args.train_steps, args.quorum,
                                             budget_total=args.budget,
-                                            mesh=mesh)
+                                            mesh=mesh, engine_kw=engine_kw)
     queries = world.study_workload()
 
     log = gw.answer_batch(queries)

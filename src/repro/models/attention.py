@@ -172,17 +172,50 @@ def _project_qkv(p: dict, x: Array, cfg: ModelConfig, positions: Array):
     return q, k, v
 
 
+def _prefill_attention(q: Array, k: Array, v: Array, *, q_positions: Array,
+                       kv_positions: Array, causal: bool, window: int | None,
+                       cfg: ModelConfig) -> Array:
+    """Prefill-path attention with per-backend impl selection.
+
+    ``cfg.attn_prefill_impl``: "chunked" = the XLA two-level-scan online
+    softmax (the oracle); "flash" = the positions-mode Pallas flash kernel
+    (interpret mode off-TPU); None = flash on TPU, chunked elsewhere —
+    tier-1 CPU numerics are unchanged by default.  Training (``attn_block``)
+    always uses the chunked path: impl selection is serving-only.
+    """
+    impl = cfg.attn_prefill_impl
+    if impl is None:
+        impl = "flash" if jax.default_backend() == "tpu" else "chunked"
+    if impl == "flash":
+        from repro.kernels.flash_attention.ops import flash_attention_positions
+        return flash_attention_positions(
+            q, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, window=window)
+    return chunked_attention(q, k, v, q_positions=q_positions,
+                             kv_positions=kv_positions, causal=causal,
+                             window=window, q_block=cfg.attn_q_block,
+                             kv_block=cfg.attn_kv_block)
+
+
 def _attn_forward(p: dict, x: Array, cfg: ModelConfig, positions: Array,
-                  local: bool) -> tuple[Array, Array, Array]:
+                  local: bool, *, prefill: bool = False
+                  ) -> tuple[Array, Array, Array]:
     """Shared full-sequence body -> (x + attn(x), k, v) — single source of
-    truth for the training forward AND prefill so they cannot diverge."""
+    truth for the training forward AND prefill so they cannot diverge.
+    ``prefill=True`` routes through ``_prefill_attention`` (impl-selected);
+    the default chunked path keeps training untouched."""
     h = rmsnorm(x, p["norm"], cfg.norm_eps)
     q, k, v = _project_qkv(p, h, cfg, positions)
-    out = chunked_attention(
-        q, k, v,
-        q_positions=positions[0], kv_positions=positions[0],
-        causal=cfg.causal, window=cfg.window if local else None,
-        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+    if prefill:
+        out = _prefill_attention(
+            q, k, v, q_positions=positions[0], kv_positions=positions[0],
+            causal=cfg.causal, window=cfg.window if local else None, cfg=cfg)
+    else:
+        out = chunked_attention(
+            q, k, v,
+            q_positions=positions[0], kv_positions=positions[0],
+            causal=cfg.causal, window=cfg.window if local else None,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return x + y, k, v
 
@@ -256,7 +289,7 @@ def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
     logical-axis sharding so the bulk scatter does not un-shard it.
     """
     if not continuation:
-        out, k, v = _attn_forward(p, x, cfg, positions, local)
+        out, k, v = _attn_forward(p, x, cfg, positions, local, prefill=True)
         return out, _scatter_kv(cache, k, v, positions, cfg, local,
                                 mesh, rules)
 
@@ -266,13 +299,65 @@ def attn_prefill(p: dict, x: Array, cache: KVCache, positions: Array,
     # queries over the full cache: empty slots carry pos = -1 and are masked
     # exactly like the decode step's mask (cache.pos rows are identical
     # across the batch — batched sessions absorb identical position grids)
-    out = chunked_attention(
+    out = _prefill_attention(
         q, cache.k, cache.v,
         q_positions=positions[0], kv_positions=cache.pos[0],
-        causal=cfg.causal, window=cfg.window if local else None,
-        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        causal=cfg.causal, window=cfg.window if local else None, cfg=cfg)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return x + y, cache
+
+
+def _decode_chunk_len(cfg: ModelConfig, length: int) -> int:
+    """Static streaming-chunk length: ``cfg.attn_decode_block`` halved until
+    it divides the cache length (local windows can be shorter than 64)."""
+    cb = min(cfg.attn_decode_block, length)
+    while length % cb:
+        cb //= 2
+    return max(cb, 1)
+
+
+def _decode_stream_chunk(carry, qr: Array, k_c: Array, v_c: Array,
+                         pos_c: Array, index: Array, cfg: ModelConfig,
+                         local: bool):
+    """Online-softmax update for ONE (B, cb) KV chunk of a decode attend.
+
+    Every decode layout — monolithic cache, gathered paged view, and the
+    kernel-first block-table read — pushes its chunks through this exact
+    function, so layouts that produce elementwise-equal chunk data are
+    bitwise-identical by construction; only chunk *provenance* differs.
+    """
+    m, l, acc = carry                       # (B,K,G), (B,K,G), (B,K,G,Dh) f32
+    # bf16 operands + f32 accumulation: never materialise an f32 cache copy
+    s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(cfg.comp_dtype), k_c,
+                   preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
+    mask = (pos_c <= index[:, None]) & (pos_c >= 0)
+    if local and cfg.window is not None:
+        mask &= index[:, None] - pos_c < cfg.window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgt,btkd->bkgd", p.astype(cfg.comp_dtype), v_c,
+                    preferred_element_type=jnp.float32)
+    acc = acc * corr[..., None] + pv
+    return m_new, l, acc
+
+
+def _decode_stream_init(B: int, cfg: ModelConfig):
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    G = cfg.num_heads // K
+    return (jnp.full((B, K, G), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G), jnp.float32),
+            jnp.zeros((B, K, G, Dh), jnp.float32))
+
+
+def _decode_stream_finish(carry, B: int, cfg: ModelConfig, mesh, rules) -> Array:
+    _, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    return constrain(out, ("act_batch", None, "act_heads", "act_head_dim"),
+                     mesh, rules)
 
 
 def _decode_attend(q: Array, k_lin: Array, v_lin: Array, pos_lin: Array,
@@ -281,23 +366,26 @@ def _decode_attend(q: Array, k_lin: Array, v_lin: Array, pos_lin: Array,
     """One query token against a slot-linear (B,T) K/V view — shared by the
     monolithic cache and the gathered paged view, so the two layouts cannot
     diverge numerically (paged == monolithic is bitwise by construction
-    when the views are elementwise equal)."""
-    B = q.shape[0]
-    G = cfg.num_heads // cfg.num_kv_heads
-    qr = q.reshape(B, cfg.num_kv_heads, G, cfg.head_dim)
-    # bf16 operands + f32 accumulation: never materialise an f32 cache copy
-    s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(cfg.comp_dtype), k_lin,
-                   preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
-    mask = (pos_lin <= index[:, None]) & (pos_lin >= 0)
-    if local and cfg.window is not None:
-        mask &= index[:, None] - pos_lin < cfg.window
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    pr = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", pr.astype(cfg.comp_dtype), v_lin,
-                     preferred_element_type=jnp.float32)
-    out = out.reshape(B, 1, cfg.num_heads, cfg.head_dim)
-    return constrain(out, ("act_batch", None, "act_heads", "act_head_dim"),
-                     mesh, rules)
+    when the views are elementwise equal).  Streams the view in
+    ``cfg.attn_decode_block`` chunks through the same online softmax the
+    kernel-first block-table path uses (see ``_decode_stream_chunk``)."""
+    B, Tl = pos_lin.shape
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    G = cfg.num_heads // K
+    qr = q.reshape(B, K, G, Dh)
+    cb = _decode_chunk_len(cfg, Tl)
+    nc = Tl // cb
+    kr = k_lin.reshape(B, nc, cb, K, Dh).swapaxes(0, 1)
+    vr = v_lin.reshape(B, nc, cb, K, Dh).swapaxes(0, 1)
+    pr = pos_lin.reshape(B, nc, cb).swapaxes(0, 1)
+
+    def step(carry, chunk):
+        k_c, v_c, p_c = chunk
+        return _decode_stream_chunk(carry, qr, k_c, v_c, p_c, index, cfg,
+                                    local), None
+
+    carry, _ = jax.lax.scan(step, _decode_stream_init(B, cfg), (kr, vr, pr))
+    return _decode_stream_finish(carry, B, cfg, mesh, rules)
 
 
 def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
@@ -406,3 +494,192 @@ def paged_scatter_blocks(pool: KVCache, table: Array, lin: KVCache,
         v=pool.v.at[dst].set(vb.astype(pool.v.dtype), mode="drop"),
         pos=pool.pos.at[dst].set(pb, mode="drop"),
     )
+
+
+def paged_scatter_delta(pool: KVCache, table: Array, delta: KVCache,
+                        p0: Array, *, window: int | None = None) -> KVCache:
+    """Scatter a dispatch's decode delta buffer (``init_decode_delta``) into
+    the pool through the table — O(steps) slot writes per row, no
+    slot-linear intermediate.  Ring layers (``window`` set) wrap slots mod
+    the view length; when ``steps`` exceeds the ring length only the LAST
+    ring-length delta rows are kept (earlier writes were superseded
+    in-ring; dropping them statically avoids the undefined ordering of
+    duplicate-index scatters).  Sentinel table entries and unwritten delta
+    rows (pos = -1) drop.  The resulting pool is elementwise-equal to what
+    the gathered-view path's ``paged_scatter_blocks`` writeback produces."""
+    N, L = pool.k.shape[0], pool.k.shape[1]
+    B, steps = delta.pos.shape
+    Tl = table.shape[1] * L
+    k, v, pos = delta.k, delta.v, delta.pos
+    off = jnp.arange(steps, dtype=jnp.int32)
+    if window is not None and steps > Tl:
+        k, v, pos = k[:, -Tl:], v[:, -Tl:], pos[:, -Tl:]
+        off = off[-Tl:]
+        steps = Tl
+    slot = p0[:, None] + off[None]
+    if window is not None:
+        slot = slot % Tl
+    blk = jnp.take_along_axis(table, slot // L, axis=1)     # (B, steps)
+    flat = jnp.where((blk < N) & (pos >= 0), blk * L + slot % L, N * L)
+    flat = flat.reshape(-1)
+    kf = pool.k.reshape(N * L, *pool.k.shape[2:])
+    vf = pool.v.reshape(N * L, *pool.v.shape[2:])
+    pf = pool.pos.reshape(N * L)
+    kf = kf.at[flat].set(k.reshape(B * steps, *k.shape[2:]).astype(kf.dtype),
+                         mode="drop")
+    vf = vf.at[flat].set(v.reshape(B * steps, *v.shape[2:]).astype(vf.dtype),
+                         mode="drop")
+    pf = pf.at[flat].set(pos.reshape(-1), mode="drop")
+    return KVCache(k=kf.reshape(pool.k.shape), v=vf.reshape(pool.v.shape),
+                   pos=pf.reshape(pool.pos.shape))
+
+
+def init_decode_delta(cfg: ModelConfig, batch: int, steps: int) -> KVCache:
+    """Per-dispatch decode write buffer for the kernel-first path: row ``t``
+    holds the K/V the dispatch's step ``t`` produced (pos -1 = unwritten).
+    O(B * steps) — the scan carry no longer holds any cache-length state."""
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, steps, K, Dh), cfg.dtype),
+        v=jnp.zeros((batch, steps, K, Dh), cfg.dtype),
+        pos=jnp.full((batch, steps), -1, jnp.int32),
+    )
+
+
+def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
+                      delta: KVCache, index: Array, t: Array, p0: Array,
+                      cfg: ModelConfig, *, local: bool, layer=None,
+                      mesh=None, rules=None) -> tuple[Array, KVCache]:
+    """One-token decode reading KV blocks IN PLACE through the block table.
+
+    ``pool`` is the layer's block pool — a decode-scan *constant*, never
+    materialised as a slot-linear view and never written here; ``table``
+    (B, nb) is the block table, already sliced to the local window for
+    windowed layers; ``delta`` holds this dispatch's decode writes (see
+    ``init_decode_delta``); ``t`` is the scalar step number within the
+    dispatch and ``p0`` (B,) the dispatch-start index (so index == p0 + t).
+
+    The new token's K/V lands in delta row ``t`` first; each streamed pool
+    chunk is then overlaid with the latest delta write per slot (ring slots
+    for windowed layers), which makes the chunk data elementwise equal to
+    the gathered-view path's slot-linear cache at step ``t`` — and the
+    attend output bitwise equal, since both layouts stream through
+    ``_decode_stream_chunk``.  On TPU the attend instead runs through the
+    block-table Pallas kernel (``kernels/decode_attention``), validated
+    against the gathered ref within tolerance.
+
+    ``layer`` set = the pool leaves are repeat-stacked ``(R, N, L, ...)``
+    (a stacked stage's scan constant) and ``layer`` is the stage scan's
+    layer index: the gathers fold ``layer * N`` into their block ids
+    instead of slicing a per-layer pool (which would copy the whole pool
+    every decode step).
+    """
+    B = x.shape[0]
+    stacked = layer is not None
+    if stacked:
+        R, N, L = pool.k.shape[0], pool.k.shape[1], pool.k.shape[2]
+        kp = pool.k.reshape((R * N,) + pool.k.shape[2:])
+        vp = pool.v.reshape((R * N,) + pool.v.shape[2:])
+        pp = pool.pos.reshape(R * N, L)
+        base = layer * N
+    else:
+        R, (N, L) = 1, (pool.k.shape[0], pool.k.shape[1])
+        kp, vp, pp = pool.k, pool.v, pool.pos
+        base = 0
+    nb = table.shape[1]
+    Tl = nb * L
+    steps = delta.pos.shape[1]
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    G = cfg.num_heads // K
+
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = _project_qkv(p, h, cfg, index[:, None])
+    delta = KVCache(
+        k=delta.k.at[:, t].set(k_new[:, 0].astype(delta.k.dtype)),
+        v=delta.v.at[:, t].set(v_new[:, 0].astype(delta.v.dtype)),
+        pos=delta.pos.at[:, t].set(index.astype(jnp.int32)),
+    )
+    qr = q.reshape(B, K, G, Dh)
+    ring = local and cfg.window is not None
+
+    if jax.default_backend() == "tpu":
+        from repro.kernels.decode_attention.ops import paged_decode_attention
+        # stacked pools fold the layer offset into the table ids; sentinel
+        # entries (>= N) stay sentinels for the flat pool (>= R * N).
+        tbl = (jnp.where(table < N, table + base, R * N + 7)
+               if stacked else table)
+        out = paged_decode_attention(
+            qr, kp, vp, pp, tbl, index,
+            window=cfg.window if local else None,
+            delta_k=delta.k, delta_v=delta.v, delta_pos=delta.pos, p0=p0)
+        out = constrain(out.reshape(B, 1, cfg.num_heads, Dh),
+                        ("act_batch", None, "act_heads", "act_head_dim"),
+                        mesh, rules)
+    else:
+        cb = _decode_chunk_len(cfg, Tl)
+        nc = Tl // cb
+        kp_flat = kp.reshape(R * N * L, K, Dh)
+        vp_flat = vp.reshape(R * N * L, K, Dh)
+        pp_flat = pp.reshape(R * N * L)
+        # gather each chunk at BLOCK granularity when the chunk is
+        # block-aligned (whole (L, K, Dh) rows, same access pattern as
+        # paged_view's one-shot gather — ~2x over a per-slot row gather on
+        # CPU); fall back to per-slot rows otherwise.  Same elements either
+        # way, so the streamed chunks stay bitwise-identical.
+        block_granular = cb % L == 0
+
+        def step(carry, xs_c):
+            if block_granular:
+                blks = xs_c                       # (cb // L,) chunk's blocks
+                sl = (blks[:, None] * L
+                      + jnp.arange(L, dtype=jnp.int32)[None]).reshape(-1)
+                # block-level clip matches paged_view's sentinel semantics
+                tb = jnp.minimum(jnp.take(table, blks, axis=1), N - 1) + base
+                k_c = jnp.take(kp, tb, axis=0).reshape(B, cb, K, Dh)
+                v_c = jnp.take(vp, tb, axis=0).reshape(B, cb, K, Dh)
+                p_c = jnp.take(pp, tb, axis=0).reshape(B, cb)
+            else:
+                sl = xs_c                         # (cb,) this chunk's slots
+                blk = (jnp.minimum(jnp.take(table, sl // L, axis=1), N - 1)
+                       + base)
+                flat = blk * L + (sl % L)[None]              # (B, cb)
+                k_c = jnp.take(kp_flat, flat, axis=0)        # (B, cb, K, Dh)
+                v_c = jnp.take(vp_flat, flat, axis=0)
+                p_c = jnp.take(pp_flat, flat, axis=0)        # (B, cb)
+            # overlay this dispatch's own writes: latest delta row per slot.
+            # The index math is cheap (B, cb) ints; the gathers + full-width
+            # wheres are ~2x the chunk's own traffic, so they run under a
+            # cond — most chunks hold no written slot and skip them.
+            if ring:
+                rel = (sl[None] - p0[:, None]) % Tl
+                d = rel + Tl * ((t - rel) // Tl)
+            else:
+                d = sl[None] - p0[:, None]
+            valid = (d >= 0) & (d <= t)
+
+            def overlay(args):
+                k_c, v_c, p_c = args
+                dc = jnp.clip(d, 0, steps - 1)
+                k_d = jnp.take_along_axis(delta.k, dc[..., None, None],
+                                          axis=1)
+                v_d = jnp.take_along_axis(delta.v, dc[..., None, None],
+                                          axis=1)
+                p_d = jnp.take_along_axis(delta.pos, dc, axis=1)
+                return (jnp.where(valid[..., None, None], k_d, k_c),
+                        jnp.where(valid[..., None, None], v_d, v_c),
+                        jnp.where(valid, p_d, p_c))
+
+            k_c, v_c, p_c = jax.lax.cond(valid.any(), overlay, lambda a: a,
+                                         (k_c, v_c, p_c))
+            return _decode_stream_chunk(carry, qr, k_c, v_c, p_c, index,
+                                        cfg, local), None
+
+        xs = (jnp.arange(nb, dtype=jnp.int32).reshape(nc, cb // L)
+              if block_granular
+              else jnp.arange(Tl, dtype=jnp.int32).reshape(nc, cb))
+        carry, _ = jax.lax.scan(step, _decode_stream_init(B, cfg), xs)
+        out = _decode_stream_finish(carry, B, cfg, mesh, rules)
+
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype),
+                   p["wo"].astype(x.dtype))
+    return x + y, delta

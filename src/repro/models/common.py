@@ -94,6 +94,16 @@ class ModelConfig:
     scan_layers: bool = True
     attn_q_block: int = 512            # chunked-attention block sizes
     attn_kv_block: int = 1024
+    # decode-attention KV chunk: the streaming-softmax chunk length for the
+    # one-token decode attend.  All decode layouts (monolithic, gathered
+    # paged view, kernel-first block-table) stream the SAME chunk math, so
+    # they stay bitwise-identical; only chunk provenance differs.  Halved
+    # statically until it divides the cache length (windows can be < 64).
+    attn_decode_block: int = 64
+    # prefill attention impl: "chunked" = the XLA two-level-scan online
+    # softmax below; "flash" = kernels/flash_attention (Pallas, interpret
+    # off-TPU); None = per-backend default (flash on TPU, chunked on CPU).
+    attn_prefill_impl: str | None = None
     moe_impl: str = "sort"             # sort | cumsum (see §Perf hillclimb)
 
     # ---- derived -----------------------------------------------------

@@ -660,6 +660,163 @@ def copy_rows(cfg: ModelConfig, layers: list, src: Array, dst: Array) -> list:
     return _map_state_pools(cfg, layers, one)
 
 
+# ---------------------------------------------------------------------------
+# Kernel-first paged decode: attention reads pool blocks in place
+# ---------------------------------------------------------------------------
+
+def paged_decode_carry(cfg: ModelConfig, cache: dict, steps: int) -> list:
+    """Initial carry for the kernel-first decode scan: per attention layer an
+    O(B * steps) delta write buffer (``attention.init_decode_delta``), per
+    recurrent layer the O(B) gathered state rows.  Unlike the gathered-view
+    path there is NO cache-length state in the carry — the KV pool itself is
+    a closed-over scan constant that ``paged_decode_step`` reads in place."""
+    layers, rows = cache["layers"], cache["rows"]
+    B = cache["table"].shape[0]
+    out = []
+    for stage, sc in zip(cfg.stage_plan(), layers):
+        ns = {}
+        for i, (mixer, _) in enumerate(stage.blocks):
+            c = sc[f"b{i}"]
+            stacked = stage.repeat > 1
+            if c.kv is not None:
+                d = attention.init_decode_delta(cfg, B, steps)
+                if stacked:
+                    d = jax.tree.map(lambda a: jnp.broadcast_to(
+                        a, (stage.repeat,) + a.shape), d)
+                c = LayerCache(kv=d)
+            else:
+                axis = 1 if stacked else 0
+                c = jax.tree.map(
+                    lambda a: jnp.take(a, rows, axis=axis, mode="clip"), c)
+            ns[f"b{i}"] = c
+        out.append(ns)
+    return out
+
+
+def _paged_block_step(bp: dict, x: Array, pool_c: LayerCache,
+                      delta_c: LayerCache, table: Array, index: Array,
+                      t: Array, p0: Array, cfg: ModelConfig,
+                      kind: tuple[str, str], mesh, rules, layer=None
+                      ) -> tuple[Array, LayerCache]:
+    """One kernel-first decode block: attention attends through the block
+    table in place (pool never copied), recurrent mixers run the unchanged
+    monolithic decode on their carried state rows.  In a stacked stage
+    ``pool_c`` holds the whole repeat-stacked pool and ``layer`` the stage
+    scan's layer index — attention folds it into its block gathers, so the
+    stage scan never slices (copies) a per-layer pool."""
+    mixer, f = kind
+    if mixer in ("attn", "attn_local"):
+        L = pool_c.kv.k.shape[2 if layer is not None else 1]
+        tbl = table[:, :_local_nb(cfg, table.shape[1], L, mixer)]
+        x, d = attention.attn_decode_paged(
+            bp["mixer"], x, pool_c.kv, tbl, delta_c.kv, index, t, p0, cfg,
+            local=(mixer == "attn_local"), layer=layer, mesh=mesh,
+            rules=rules)
+        delta_c = delta_c._replace(kv=d)
+    elif mixer == "rglru":
+        x, rg = rglru.rglru_decode(bp["mixer"], x, delta_c.rg, cfg,
+                                   mesh=mesh, rules=rules)
+        delta_c = delta_c._replace(rg=rg)
+    elif mixer == "ssd":
+        x, s = ssm.ssd_decode(bp["mixer"], x, delta_c.ssd, cfg,
+                              mesh=mesh, rules=rules)
+        delta_c = delta_c._replace(ssd=s)
+    if f == "mlp":
+        x = ffn.mlp_block(bp["ffn"], x, cfg)
+    elif f == "moe":
+        x, _ = moe.moe_decode_block(bp["ffn"], x, cfg, mesh=mesh, rules=rules)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), mesh, rules)
+    return x, delta_c
+
+
+def paged_decode_step(params: dict, cfg: ModelConfig, tokens: Array,
+                      cache: dict, delta: list, index: Array, t: Array,
+                      p0: Array, *, mesh=None,
+                      rules: ShardingRules | None = None
+                      ) -> tuple[Array, list]:
+    """Kernel-first ``decode_step``: tokens (B,1), index (B,) -> (logits,
+    delta).  ``cache`` is the paged pool pytree, closed over as a scan
+    CONSTANT — attention reads KV blocks in place through the block table
+    and never materialises the slot-linear view; ``delta``
+    (``paged_decode_carry``) collects the dispatch's writes; ``t`` is the
+    step number within the dispatch, ``p0`` the dispatch-start index.
+    Stacked stages run as a lax.scan over (params, delta, layer-index) —
+    the SAME stage structure as ``_cached_pass``, which matters for bitwise
+    parity: XLA fuses a scan body differently from a Python unroll
+    (measured 1-ulp logit noise on the smoke config), so the kernel-first
+    path presents the shared block ops inside an identical scan body.  The
+    pool is NOT scan xs: slicing a per-layer pool per repeat would copy the
+    whole pool every decode step, so the stacked pool stays closed over and
+    attention folds the layer index into its block gathers
+    (``attn_decode_paged(layer=...)``) — the outer decode scan carries no
+    O(pool) state and the stage scan moves none."""
+    layers, table = cache["layers"], cache["table"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.comp_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), mesh, rules)
+    new_delta = []
+    for sp, stage, sc, dc in zip(params["stages"], cfg.stage_plan(), layers,
+                                 delta):
+        def stage_body(x, lp, d_c, li, stage=stage, sc=sc):
+            nds = {}
+            for i, kind in enumerate(stage.blocks):
+                x, nds[f"b{i}"] = _paged_block_step(
+                    lp[f"b{i}"], x, sc[f"b{i}"], d_c[f"b{i}"], table,
+                    index, t, p0, cfg, kind, mesh, rules, layer=li)
+            return x, nds
+
+        if stage.repeat == 1:
+            x, ns = stage_body(x, sp, dc, None)
+        else:
+            x, ns = jax.lax.scan(
+                lambda x, xs_l: stage_body(x, xs_l[0], xs_l[1], xs_l[2]),
+                x, (sp, dc, jnp.arange(stage.repeat, dtype=jnp.int32)))
+        new_delta.append(ns)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = constrain(logits, ("act_batch", "act_seq", "act_vocab"), mesh,
+                       rules)
+    return logits, new_delta
+
+
+def paged_scatter_decode(cfg: ModelConfig, cache: dict, delta: list,
+                         p0: Array) -> list:
+    """End-of-dispatch writeback for the kernel-first decode: scatter each
+    attention layer's delta rows into their pool slots through the table
+    (``attention.paged_scatter_delta`` — O(steps) writes per row) and each
+    recurrent layer's carried state rows.  Produces pools elementwise-equal
+    to the gathered path's ``paged_scatter_back``; sentinel table entries /
+    row ids drop."""
+    layers, table, rows = cache["layers"], cache["table"], cache["rows"]
+    nb = table.shape[1]
+    out = []
+    for stage, sc, dl in zip(cfg.stage_plan(), layers, delta):
+        ns = {}
+        for i, (mixer, _) in enumerate(stage.blocks):
+            c, d = sc[f"b{i}"], dl[f"b{i}"]
+            stacked = stage.repeat > 1
+            if c.kv is not None:
+                L = c.kv.k.shape[2 if stacked else 1]
+                tbl = table[:, :_local_nb(cfg, nb, L, mixer)]
+                win = cfg.window if mixer == "attn_local" else None
+                scat = lambda p, v: attention.paged_scatter_delta(
+                    p, tbl, v, p0, window=win)
+                kv = (jax.vmap(scat)(c.kv, d.kv) if stacked
+                      else scat(c.kv, d.kv))
+                c = c._replace(kv=kv)
+            else:
+                axis = 1 if stacked else 0
+
+                def one(pool_leaf, d_leaf, axis=axis):
+                    idx = (slice(None), rows) if axis else rows
+                    return pool_leaf.at[idx].set(
+                        d_leaf.astype(pool_leaf.dtype), mode="drop")
+                c = jax.tree.map(one, c, d)
+            ns[f"b{i}"] = c
+        out.append(ns)
+    return out
+
+
 def decode_step(params: dict, cfg: ModelConfig, tokens: Array, cache: list,
                 index: Array, *, mesh=None,
                 rules: ShardingRules | None = None

@@ -219,15 +219,66 @@ def _prefill_continue_paged(params, cfg: ModelConfig, prompts, s_orig, start,
     return cur, last, T.paged_cache(layers, cache["table"], cache["rows"])
 
 
+def _decode_scan_kernel(params, cfg: ModelConfig, cur, last, cache, pos, rng,
+                        ucfg: UncertaintyConfig, steps: int, greedy: bool,
+                        with_logits: bool = True, mesh=None, rules=None):
+    """Kernel-first paged decode chunk: attention reads KV blocks IN PLACE
+    through the block table (``transformer.paged_decode_step``) — the
+    O(B * S) slot-linear view is never materialised.  The scan carry holds
+    only the O(B * steps) delta write buffers + O(B) recurrent state rows
+    (``paged_decode_carry``); the pool rides the closure as a scan constant
+    and receives one delta scatter at the end of the dispatch.  Sampling,
+    rng-splitting and uncertainty ops mirror ``_decode_scan`` exactly, and
+    the streamed chunk data equals the gathered view elementwise, so tokens
+    AND logits are bitwise-identical to the gathered-view path."""
+    cache = T.constrain_cache(cache, cfg, mesh, rules)
+    p0 = pos
+    delta0 = T.paged_decode_carry(cfg, cache, steps)
+
+    def body(carry, t):
+        cur, last, delta, pos_c, rng = carry
+        h, v = U.uncertainty_terms(last[:, None, :], cur[:, None], ucfg)
+        rng, sub = jax.random.split(rng)
+        logits, delta = T.paged_decode_step(
+            params, cfg, cur[:, None], cache, delta, pos_c, t, p0,
+            mesh=mesh, rules=rules)
+        lg = logits[:, -1].astype(jnp.float32)
+        lg = sh.constrain(lg, ("act_batch", "act_vocab"), mesh, rules)
+        if greedy:
+            nxt = jnp.argmax(lg, axis=-1)
+        else:
+            nxt = jax.random.categorical(sub, lg, axis=-1)
+        out = (cur, h[:, 0], v[:, 0]) + ((last,) if with_logits else ())
+        return (nxt.astype(jnp.int32), lg, delta, pos_c + 1, rng), out
+
+    carry, outs = jax.lax.scan(body, (cur, last, delta0, pos, rng),
+                               jnp.arange(steps))
+    cur2, last2, delta2, pos2, rng2 = carry
+    layers = T.paged_scatter_decode(cfg, cache, delta2, p0)
+    out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+    toks, h_per, v_per = (o.swapaxes(0, 1) for o in outs[:3])
+    lgs = outs[3].swapaxes(0, 1) if with_logits else None
+    return toks, lgs, h_per, v_per, (cur2, last2, out_cache, pos2, rng2)
+
+
 @partial(jax.jit, static_argnames=("cfg", "ucfg", "steps", "greedy",
-                                   "with_logits", "mesh", "rules"),
+                                   "with_logits", "impl", "mesh", "rules"),
          donate_argnames=("cache",))
 def _decode_scan_paged(params, cfg: ModelConfig, cur, last, cache, pos, rng,
                        ucfg: UncertaintyConfig, steps: int, greedy: bool,
-                       with_logits: bool = True, mesh=None, rules=None):
-    """Paged decode chunk: gather -> the monolithic ``_decode_scan`` ->
-    scatter blocks [pos, pos + steps) back.  Carry mirrors ``_decode_scan``
-    with the paged cache pytree in the cache slot."""
+                       with_logits: bool = True, impl: str = "gather",
+                       mesh=None, rules=None):
+    """Paged decode chunk.  ``impl="kernel"`` (the serving default) runs the
+    kernel-first in-place block-table path (``_decode_scan_kernel``);
+    ``impl="gather"`` is the parity oracle: gather -> the monolithic
+    ``_decode_scan`` -> scatter blocks [pos, pos + steps) back.  Carry
+    mirrors ``_decode_scan`` with the paged cache pytree in the cache
+    slot; both impls produce bitwise-identical tokens and logits."""
+    if impl == "kernel":
+        return _decode_scan_kernel(params, cfg, cur, last, cache, pos, rng,
+                                   ucfg, steps, greedy,
+                                   with_logits=with_logits, mesh=mesh,
+                                   rules=rules)
     cache = T.constrain_cache(cache, cfg, mesh, rules)
     lin = T.paged_gather(cfg, cache)
     toks, lgs, h_per, v_per, carry = _decode_scan(
@@ -240,58 +291,82 @@ def _decode_scan_paged(params, cfg: ModelConfig, cur, last, cache, pos, rng,
 
 
 @partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "greedy",
-                                   "mesh", "rules"),
+                                   "impl", "mesh", "rules"),
          donate_argnames=("cache",))
 def _generate_fused_paged(params, cfg: ModelConfig, prompts, s_orig, cache,
                           rng, ucfg: UncertaintyConfig, max_new: int,
-                          greedy: bool, mesh=None, rules=None):
+                          greedy: bool, impl: str = "gather", mesh=None,
+                          rules=None):
     """Paged sibling of ``_generate_fused``: the cache comes in as the
     paged pool + this request's block tables / state rows (freshly
     allocated and reset by the CachePool) instead of being initialised
-    in-trace.  One gather, the whole monolithic prefill + scanned decode,
-    one scatter of blocks [0, s_orig + max_new)."""
+    in-trace.
+
+    ``impl="gather"``: one gather, the whole monolithic prefill + scanned
+    decode, one scatter of blocks [0, s_orig + max_new).
+    ``impl="kernel"``: the prefill still gathers (amortised over the whole
+    span) and scatters [0, s_orig) back, but the decode scan reads blocks
+    in place (``_decode_scan_kernel``) — no per-step slot-linear KV."""
     B = prompts.shape[0]
     cache = T.constrain_cache(cache, cfg, mesh, rules)
     lin = T.paged_gather(cfg, cache)
     cur, last, lin = _prefill_into(params, cfg, prompts, s_orig, lin,
                                    mesh=mesh, rules=rules)
-    toks, lgs, h_per, v_per, carry = _decode_scan(
-        params, cfg, cur, last, lin, jnp.broadcast_to(s_orig, (B,)), rng,
-        ucfg, max_new, greedy, mesh=mesh, rules=rules)
-    cur2, last2, lin2, pos2, rng2 = carry
-    layers = T.paged_scatter_back(
-        cfg, cache, lin2, jnp.zeros((B,), jnp.int32),
-        jnp.broadcast_to(s_orig + max_new, (B,)).astype(jnp.int32))
-    out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+    pos = jnp.broadcast_to(s_orig, (B,))
+    if impl == "kernel":
+        layers = T.paged_scatter_back(
+            cfg, cache, lin, jnp.zeros((B,), jnp.int32),
+            jnp.broadcast_to(s_orig, (B,)).astype(jnp.int32))
+        cache = T.paged_cache(layers, cache["table"], cache["rows"])
+        toks, lgs, h_per, v_per, carry = _decode_scan_kernel(
+            params, cfg, cur, last, cache, pos, rng, ucfg, max_new, greedy,
+            mesh=mesh, rules=rules)
+    else:
+        toks, lgs, h_per, v_per, scarry = _decode_scan(
+            params, cfg, cur, last, lin, pos, rng,
+            ucfg, max_new, greedy, mesh=mesh, rules=rules)
+        cur2, last2, lin2, pos2, rng2 = scarry
+        layers = T.paged_scatter_back(
+            cfg, cache, lin2, jnp.zeros((B,), jnp.int32),
+            jnp.broadcast_to(s_orig + max_new, (B,)).astype(jnp.int32))
+        out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+        carry = (cur2, last2, out_cache, pos2, rng2)
     h, v = h_per.mean(-1), v_per.mean(-1)
-    return (toks, lgs, U.combine_terms(h, v, ucfg), h, v,
-            (cur2, last2, out_cache, pos2, rng2))
+    return toks, lgs, U.combine_terms(h, v, ucfg), h, v, carry
 
 
 @partial(jax.jit, static_argnames=("cfg", "ucfg", "max_new", "greedy",
-                                   "mesh", "rules"),
+                                   "impl", "mesh", "rules"),
          donate_argnames=("cache",))
 def _generate_continue_paged(params, cfg: ModelConfig, prompts, s_orig,
                              start, cache, rng, ucfg: UncertaintyConfig,
-                             max_new: int, greedy: bool, mesh=None,
-                             rules=None):
+                             max_new: int, greedy: bool,
+                             impl: str = "gather", mesh=None, rules=None):
     """Paged sibling of ``_generate_continue``: continuation prefill +
-    scanned decode over the gathered view, scatter of blocks
-    [start, start + s_orig + max_new)."""
+    scanned decode, scatter of blocks [start, start + s_orig + max_new).
+    ``impl="kernel"`` scatters the prefill span back and decodes in place
+    through the block table (see ``_generate_fused_paged``)."""
     cache = T.constrain_cache(cache, cfg, mesh, rules)
     lin = T.paged_gather(cfg, cache)
     cur, last, lin = _prefill_continue(params, cfg, prompts, s_orig, start,
                                        lin, mesh=mesh, rules=rules)
-    toks, lgs, h_per, v_per, carry = _decode_scan(
-        params, cfg, cur, last, lin, start + s_orig, rng, ucfg, max_new,
-        greedy, mesh=mesh, rules=rules)
-    cur2, last2, lin2, pos2, rng2 = carry
-    layers = T.paged_scatter_back(cfg, cache, lin2, start,
-                                  start + s_orig + max_new)
-    out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+    if impl == "kernel":
+        layers = T.paged_scatter_back(cfg, cache, lin, start, start + s_orig)
+        cache = T.paged_cache(layers, cache["table"], cache["rows"])
+        toks, lgs, h_per, v_per, carry = _decode_scan_kernel(
+            params, cfg, cur, last, cache, start + s_orig, rng, ucfg,
+            max_new, greedy, mesh=mesh, rules=rules)
+    else:
+        toks, lgs, h_per, v_per, scarry = _decode_scan(
+            params, cfg, cur, last, lin, start + s_orig, rng, ucfg, max_new,
+            greedy, mesh=mesh, rules=rules)
+        cur2, last2, lin2, pos2, rng2 = scarry
+        layers = T.paged_scatter_back(cfg, cache, lin2, start,
+                                      start + s_orig + max_new)
+        out_cache = T.paged_cache(layers, cache["table"], cache["rows"])
+        carry = (cur2, last2, out_cache, pos2, rng2)
     h, v = h_per.mean(-1), v_per.mean(-1)
-    return (toks, lgs, U.combine_terms(h, v, ucfg), h, v,
-            (cur2, last2, out_cache, pos2, rng2))
+    return toks, lgs, U.combine_terms(h, v, ucfg), h, v, carry
 
 
 @partial(jax.jit, static_argnames=("cfg", "mesh", "rules"))
@@ -455,8 +530,33 @@ class InferenceEngine:
     block_len: int = 64
     pool_blocks: int | None = None      # default: 16 full-length sessions
     pool_rows: int | None = None        # recurrent-state rows in the pool
+    # paged decode-attention impl (docs/RUNTIME.md "Kernel-first decode"):
+    # "kernel" reads KV blocks in place through the block table — no
+    # per-step slot-linear gather; "gather" is the parity oracle (gather ->
+    # monolithic decode -> scatter).  None = measured-best per backend
+    # (kernel everywhere: bitwise-identical tokens+logits either way, and
+    # the in-place read wins on both CPU and TPU — see benchmarks/
+    # decode_microbench.py).
+    attn_decode_impl: str | None = None
+    # persistent compilation cache: set to a directory to make every jit
+    # this engine triggers write/read XLA executables there — a second
+    # process constructing the same engine performs ZERO fresh compiles
+    # for already-seen (config, bucket, mesh) cells (serve() cold start).
+    compilation_cache_dir: str | None = None
 
     def __post_init__(self):
+        if self.compilation_cache_dir is not None:
+            jax.config.update("jax_compilation_cache_dir",
+                              self.compilation_cache_dir)
+            # cache every executable, however small/fast to compile —
+            # serve() cold-start cost is dominated by many small jits
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+            jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+            # any jit BEFORE this point (param init, another engine) latches
+            # the cache module into "initialized, disabled" — re-arm it so
+            # it picks up the directory we just configured
+            from jax.experimental.compilation_cache import compilation_cache
+            compilation_cache.reset_cache()
         self._mesh_jits: dict = {}
         # host-side dispatch accounting: how many cold prefills, warm
         # continuation prefills and decode-only resumes this engine issued
@@ -487,6 +587,12 @@ class InferenceEngine:
                     f"attention window {self.cfg.window} (the ring view is "
                     "assembled from whole blocks)")
             from repro.serving.cache_manager import CachePool
+            if self.attn_decode_impl is None:
+                self.attn_decode_impl = "kernel"
+            if self.attn_decode_impl not in ("kernel", "gather"):
+                raise ValueError(
+                    f"attn_decode_impl must be 'kernel' or 'gather', got "
+                    f"{self.attn_decode_impl!r}")
             n_blocks = self.pool_blocks or max(64, 16 * self.max_len // L)
             n_rows = self.pool_rows or max(
                 16, n_blocks * L // max(self.max_len, 1))
@@ -786,6 +892,7 @@ class InferenceEngine:
                     jnp.int32(s_orig),
                     self._paged_dev_cache(handle.tables, handle.rows), rng,
                     self.ucfg, int(max_new), bool(greedy),
+                    impl=self.attn_decode_impl,
                     mesh=self.mesh, rules=self.rules)
             elif self.mesh is not None:
                 fn = self._fused_sharded(B, pb.shape[1], max_len,
@@ -815,6 +922,7 @@ class InferenceEngine:
                     self.params, self.cfg, jnp.asarray(pb),
                     jnp.int32(s_orig), state.pos, cache, rng, self.ucfg,
                     int(max_new), bool(greedy),
+                    impl=self.attn_decode_impl,
                     mesh=self.mesh, rules=self.rules)
             elif self.mesh is not None:
                 fn = self._cont_sharded(B, pb.shape[1], max_len,
@@ -963,6 +1071,7 @@ class InferenceEngine:
             toks, lgs, h_per, v_per, carry = _decode_scan_paged(
                 self.params, self.cfg, state.cur, state.last, cache,
                 state.pos, rng, self.ucfg, int(max_new), bool(greedy),
+                impl=self.attn_decode_impl,
                 mesh=self.mesh, rules=self.rules)
         elif self.mesh is not None:
             toks, h_per, v_per, carry = self._decode_sharded(
@@ -1364,8 +1473,9 @@ class InferenceEngine:
                 cache = self._paged_dev_cache(slot_tables, slot_rows)
                 toks, _, h_per, v_per, carry = _decode_scan_paged(
                     self.params, self.cfg, cur, last, cache, pos, rng,
-                    self.ucfg, chunk, bool(greedy),
-                    with_logits=False, mesh=self.mesh, rules=self.rules)
+                    self.ucfg, chunk, bool(greedy), with_logits=False,
+                    impl=self.attn_decode_impl,
+                    mesh=self.mesh, rules=self.rules)
             elif self.mesh is not None:
                 toks, h_per, v_per, carry = self._decode_sharded(
                     n_slots, max_len, chunk, bool(greedy))(

@@ -5,10 +5,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
-from repro.kernels.decode_attention.ref import decode_attention_ref
-from repro.kernels.flash_attention.kernel import flash_attention_pallas
-from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_pallas, paged_decode_attention_pallas)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                paged_decode_attention_ref)
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_pallas, flash_attention_positions_pallas)
+from repro.kernels.flash_attention.ref import (flash_attention_positions_ref,
+                                               flash_attention_ref)
 from repro.kernels.swarm_uncertainty.kernel import uncertainty_pallas
 from repro.kernels.swarm_uncertainty.ref import uncertainty_ref
 
@@ -81,6 +85,35 @@ class TestFlashAttention:
                                    np.asarray(out_kernel, np.float32),
                                    rtol=2e-2, atol=2e-2)
 
+    @pytest.mark.parametrize("window", [None, 8])
+    def test_positions_mode_matches_ref_and_chunked(self, window):
+        """Positions-mode kernel (span attends over a live cache, empty
+        slots pos = -1) == positions ref == the model's chunked path."""
+        from repro.models.attention import chunked_attention
+        B, S, T, H, K, D = 2, 8, 32, 4, 2, 32
+        q = jax.random.normal(KEYS[2], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(KEYS[3], (B, T, K, D), jnp.float32)
+        v = jax.random.normal(KEYS[4], (B, T, K, D), jnp.float32)
+        # continuation layout: span at positions 20..27, cache holds 0..19
+        # plus the span's own slots, tail slots empty (-1)
+        qpos = jnp.arange(20, 20 + S, dtype=jnp.int32)
+        kvpos = jnp.where(jnp.arange(T) < 28, jnp.arange(T), -1)
+        out = flash_attention_positions_pallas(
+            q, k, v, q_positions=qpos, kv_positions=kvpos, causal=True,
+            window=window, bq=4, bk=8, interpret=True)
+        ref = flash_attention_positions_ref(
+            q, k, v, q_positions=qpos, kv_positions=kvpos, causal=True,
+            window=window)
+        ch = chunked_attention(q, k, v, q_positions=qpos, kv_positions=kvpos,
+                               causal=True, window=window, q_block=4,
+                               kv_block=8)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ch, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
 
 class TestDecodeAttention:
     @pytest.mark.parametrize("B,T,K,G,D,window,bt", [
@@ -117,3 +150,133 @@ class TestDecodeAttention:
         out = decode_attention_pallas(q, k, v, pos, idx, bt=32,
                                       interpret=True)
         assert float(jnp.abs(out).max()) < 50.0  # poison never attended
+
+
+class TestPagedDecodeKernel:
+    """Block-table kernel: ring layouts, sentinel entries, delta overlay —
+    all validated against the gathered-view reference."""
+
+    B, K, G, D, N, L, nb = 2, 2, 2, 32, 16, 8, 4   # Tl = 32
+
+    def _pool_state(self, *, window, p0, sentinel=False):
+        """Pool filled linearly up to p0[b] tokens per row (ring slots for
+        windowed layers: slot = pos % Tl, wrapped writes land BELOW the
+        linear position)."""
+        B, K, D, N, L, nb = self.B, self.K, self.D, self.N, self.L, self.nb
+        Tl = nb * L
+        q = jax.random.normal(KEYS[0], (B, K, self.G, D), jnp.float32)
+        k_pool = jax.random.normal(KEYS[1], (N, L, K, D), jnp.float32)
+        v_pool = jax.random.normal(KEYS[2], (N, L, K, D), jnp.float32)
+        table = jax.random.permutation(KEYS[3], N)[:B * nb].reshape(
+            B, nb).astype(jnp.int32)
+        if sentinel:
+            table = table.at[0, nb - 1].set(N + 7)
+        pos_pool = np.full((N, L), -1, np.int32)
+        for b in range(B):
+            for p in range(int(p0[b])):          # later writes win (ring)
+                sl = p % Tl if window is not None else p
+                blk = int(table[b, sl // L])
+                if blk < N:
+                    pos_pool[blk, sl % L] = p
+        return q, k_pool, v_pool, jnp.asarray(pos_pool), table
+
+    def _delta(self, p0, t_now, steps=6):
+        dk = jax.random.normal(KEYS[4], (self.B, steps, self.K, self.D),
+                               jnp.float32)
+        dv = jax.random.normal(KEYS[5], (self.B, steps, self.K, self.D),
+                               jnp.float32)
+        dpos = jnp.where(jnp.arange(steps)[None] <= t_now,
+                         p0[:, None] + jnp.arange(steps)[None],
+                         -1).astype(jnp.int32)
+        return dk, dv, dpos
+
+    @pytest.mark.parametrize("window", [None, 32])
+    @pytest.mark.parametrize("sentinel", [False, True])
+    def test_delta_overlay_matches_ref(self, window, sentinel):
+        Tl = self.nb * self.L
+        idx = jnp.array([Tl + 5 if window is not None else Tl - 2,
+                         Tl // 2], jnp.int32)
+        p0 = idx - 3
+        q, k_pool, v_pool, pos_pool, table = self._pool_state(
+            window=window, p0=p0, sentinel=sentinel)
+        dk, dv, dpos = self._delta(p0, t_now=3)
+        out = paged_decode_attention_pallas(
+            q, k_pool, v_pool, pos_pool, table, idx, window=window,
+            delta_k=dk, delta_v=dv, delta_pos=dpos, p0=p0, interpret=True)
+        ref = paged_decode_attention_ref(
+            q, k_pool, v_pool, pos_pool, table, idx, window=window,
+            delta_k=dk, delta_v=dv, delta_pos=dpos, p0=p0)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_ring_wrap_reads_below_linear_position(self):
+        """Windowed ring: index past the view length, writes wrapped — the
+        kernel must attend the wrapped slots (positions idx-window+1..idx),
+        matching the gathered-view reference on the ring layout."""
+        window = self.nb * self.L                # Tl == window ring
+        idx = jnp.array([window + 10, window + 3], jnp.int32)
+        p0 = idx - 2
+        q, k_pool, v_pool, pos_pool, table = self._pool_state(
+            window=window, p0=p0)
+        dk, dv, dpos = self._delta(p0, t_now=2)
+        out = paged_decode_attention_pallas(
+            q, k_pool, v_pool, pos_pool, table, idx, window=window,
+            delta_k=dk, delta_v=dv, delta_pos=dpos, p0=p0, interpret=True)
+        ref = paged_decode_attention_ref(
+            q, k_pool, v_pool, pos_pool, table, idx, window=window,
+            delta_k=dk, delta_v=dv, delta_pos=dpos, p0=p0)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_sentinel_entries_never_attended(self):
+        """Invalid table entries (>= N, empty serve slots) are masked out
+        wholesale — poison in the clamped-to block never leaks."""
+        Tl = self.nb * self.L
+        idx = jnp.array([Tl - 2, Tl // 2], jnp.int32)
+        p0 = idx + 1                              # no dispatch writes yet
+        q, k_pool, v_pool, pos_pool, table = self._pool_state(
+            window=None, p0=p0)
+        table = table.at[0, self.nb - 1].set(self.N + 3)
+        # poison the block the sentinel clamps to (N - 1) with huge values
+        # at valid-looking positions
+        k_pool = k_pool.at[self.N - 1].set(1e3)
+        v_pool = v_pool.at[self.N - 1].set(1e3)
+        out = paged_decode_attention_pallas(
+            q, k_pool, v_pool, pos_pool, table, idx, interpret=True)
+        ref = paged_decode_attention_ref(
+            q, k_pool, v_pool, pos_pool, table, idx)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_gathered_view_equivalence(self):
+        """The paged ref matches the monolithic ref on the hand-gathered
+        linear view with the delta scattered in — the oracle chain the
+        engine parity suite leans on.  (Allclose, not exact: the paged ref
+        concatenates delta rows after the view, so softmax summation order
+        differs from the in-place scatter.)"""
+        Tl = self.nb * self.L
+        idx = jnp.array([Tl - 2, Tl // 2], jnp.int32)
+        p0 = idx - 3
+        q, k_pool, v_pool, pos_pool, table = self._pool_state(
+            window=None, p0=p0)
+        dk, dv, dpos = self._delta(p0, t_now=3)
+        ref = paged_decode_attention_ref(
+            q, k_pool, v_pool, pos_pool, table, idx, window=None,
+            delta_k=dk, delta_v=dv, delta_pos=dpos, p0=p0)
+        # hand-gather the linear view, then scatter the written delta rows
+        flat = table.reshape(-1)
+        k = jnp.take(k_pool, flat, axis=0).reshape(self.B, Tl, self.K, self.D)
+        v = jnp.take(v_pool, flat, axis=0).reshape(self.B, Tl, self.K, self.D)
+        pos = jnp.take(pos_pool, flat, axis=0).reshape(self.B, Tl)
+        b = jnp.arange(self.B)[:, None]
+        sl = jnp.where(dpos >= 0, dpos, Tl)      # slot == position (linear)
+        k = k.at[b, sl].set(dk, mode="drop")
+        v = v.at[b, sl].set(dv, mode="drop")
+        pos = pos.at[b, sl].set(dpos, mode="drop")
+        mono = decode_attention_ref(q, k, v, pos, idx)
+        np.testing.assert_allclose(np.asarray(ref, np.float32),
+                                   np.asarray(mono, np.float32),
+                                   rtol=1e-5, atol=1e-5)
