@@ -110,6 +110,28 @@ def bench_all() -> list[tuple[str, float, float]]:
     rows.append(("serve_16req_4slot_n8", us_serve,
                  round(16 * 8 / (us_serve / 1e6), 1)))  # tokens/s
 
+    # graceful degradation under chaos (ISSUE 8): the same 16-request serve
+    # with an injected fault schedule — two pool-famine admission rounds
+    # (backpressure) plus a mid-decode slot failure (requeue, decode
+    # progress lost).  Every request still finishes; the ratio row is the
+    # relative degraded throughput (1.0 = zero overhead) and CI's chaos
+    # smoke enforces its floor.
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    def serve_degraded():
+        plan = FaultPlan([FaultEvent("pool", "famine", count=2),
+                          FaultEvent("slot", "fail", count=1)])
+        reqs = [Request(rid=i, prompt=prompts[i % 4].tolist(), max_new=8)
+                for i in range(16)]
+        fin = eng.serve(reqs, n_slots=4, decode_chunk=8, faults=plan)
+        assert len(fin) == 16
+        return fin
+    us_deg = _time(lambda: np.zeros(len(serve_degraded())), iters=3, warmup=1)
+    rows.append(("serve_chaos_16req_4slot_n8", us_deg,
+                 round(16 * 8 / (us_deg / 1e6), 1)))  # tokens/s
+    rows.append(("degraded_mode_throughput", us_deg,
+                 round(us_serve / us_deg, 2)))
+
     # fused MoE serving vs stepwise (deepseek-style smoke: top-2 of 8
     # routed + 2 shared experts, B=4/S=32/max_new=8).  The capacity-aware
     # masked dispatch puts MoE configs on the same jitted-prefill +

@@ -1,9 +1,14 @@
-"""Fault-tolerance demo: checkpoint/restart + O5 degradation + quorum.
+"""Fault-tolerance demo: checkpoints + execution-level chaos + quorum.
 
 1. Train with checkpoints, kill mid-run (simulated), resume — identical
    final loss to an uninterrupted run (deterministic pipeline replay).
-2. WAN outage: gateway degrades cloud -> swarm -> local, zero failures.
-3. Straggler mitigation: quorum-2 swarm latency vs full-swarm (Eq. 9).
+2. Session durability: checkpoint a live chat, restart the engine,
+   resume bitwise (serving-side analogue of 1).
+3. Execution-level fault injection (serving/faults.py FaultPlan): a dead
+   cloud (summon retries, circuit breaker, O5 degradation), a member
+   crashing mid-round (quorum salvage), and an injected straggler — the
+   gateway answers EVERY query in all three scenarios.
+4. Straggler mitigation: quorum-2 swarm latency vs full-swarm (Eq. 9).
 
   PYTHONPATH=src python examples/fault_tolerance.py
 """
@@ -62,19 +67,73 @@ def main():
           f"resumed {loss_resumed:.4f} "
           f"(delta {abs(loss_uninterrupted - loss_resumed):.5f})")
 
-    # --- 2. WAN outage degradation (O5) -----------------------------------
+    # --- 2. session durability: restart the ENGINE mid-chat ---------------
+    from repro.core.uncertainty import UncertaintyConfig
+    from repro.serving.engine import InferenceEngine
+
+    def serving_engine():
+        sp = T.init_params(cfg, jax.random.PRNGKey(1))
+        return InferenceEngine("chat", cfg, sp,
+                               UncertaintyConfig(mode="distribution"),
+                               paged=True, block_len=16)
+
+    e1 = serving_engine()
+    st = e1.generate(np.array([[3, 20, 195, 2]], np.int32), 4,
+                     return_state=True)["state"]
+    turn2 = np.array([[9, 4, 2]], np.int32)
+    with tempfile.TemporaryDirectory() as d:
+        e1.checkpoint_session(st, d)
+        ref = e1.generate(turn2, 4, state=st)["tokens"]
+        e2 = serving_engine()                 # the "restarted" process
+        resumed = e2.generate(turn2, 4, state=e2.restore_session(d))["tokens"]
+    print(f"session restored across engine restart: resumed turn matches "
+          f"uninterrupted chat = {bool((ref == resumed).all())}")
+
+    # --- 3. execution-level chaos through the gateway ---------------------
     from repro.core.router import CLOUD, CLOUD_SAFETY
     from repro.launch.serve import build_gateway
+    from repro.serving.faults import FaultEvent, FaultPlan
     from repro.serving.simulator import NetworkSimulator, SimConfig
     gw, probe, cloud, world = build_gateway(train_steps=60)
-    gw.sim = NetworkSimulator(SimConfig(wan_outage_p=1.0, wan_recover_p=0.0),
-                              LatencyParams(), n_members=3)
-    log = gw.answer_batch(world.study_workload(6, 6, 4))
-    n_cloud = int(np.isin(log.decision, (CLOUD, CLOUD_SAFETY)).sum())
-    print(f"WAN down: {len(log.decision)} queries answered, "
-          f"{n_cloud} reached cloud (expected 0)")
+    gw.sim = NetworkSimulator(SimConfig(wan_outage_p=0.0), LatencyParams(),
+                              n_members=len(gw.swarm.members))
+    qs = world.study_workload(6, 6, 4)
+    # a dead cloud forces safety escalations to REFUSE (the O5-safe policy
+    # outcome, but still a degradation) — the zero-failures claim is for
+    # answerable work, so the outage scenario runs the non-safety slice
+    qs_no_safety = world.study_workload(6, 6, 0)
 
-    # --- 3. quorum straggler mitigation ------------------------------------
+    def chaos(name, plan, queries):
+        gw.faults = plan
+        gw.swarm.faults = plan
+        gw.reset_fault_state()
+        log = gw.answer_batch(queries)
+        fc = log.faults
+        assert log.availability() == 1.0, f"{name}: dropped queries!"
+        print(f"{name}: {len(log.decision)} queries, 0 failed "
+              f"(availability {log.availability():.2f}; "
+              f"retries {fc['cloud_retries']}, breaker {fc['breaker_opened']},"
+              f" casualties {fc['member_casualties']}, "
+              f"straggle {fc['member_straggle_s']:.1f}s)")
+        return log
+
+    # 3a. cloud outage: every summon times out -> retried, breaker opens,
+    # O5 degrades cloud aspirants to their swarm/local candidates
+    log = chaos("cloud outage",
+                FaultPlan([FaultEvent("cloud", "timeout", count=999)]),
+                qs_no_safety)
+    n_cloud = int(np.isin(log.decision, (CLOUD, CLOUD_SAFETY)).sum())
+    print(f"  -> {n_cloud} queries reached cloud (expected 0)")
+    # 3b. member 1 crashes mid-round: survivors' consensus salvages it
+    chaos("member crash",
+          FaultPlan([FaultEvent("member:1", "crash", count=999)]), qs)
+    # 3c. injected straggler: answers unchanged, delay hits Eq. 9 latency
+    chaos("straggler",
+          FaultPlan([FaultEvent("member:2", "straggle", count=999,
+                                delay_s=2.0)]), qs)
+    gw.faults = gw.swarm.faults = None
+
+    # --- 4. quorum straggler mitigation ------------------------------------
     rng = np.random.RandomState(0)
     edge = rng.lognormal(0, 0.4, (2000, 3)) + 0.5
     comm = np.abs(rng.normal(0.15, 0.08, (2000, 3)))

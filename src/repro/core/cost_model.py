@@ -59,6 +59,20 @@ def latency_cloud(t_tokens: Array, wan_rtt: Array, p: LatencyParams) -> Array:
     return wan_rtt + p.cloud_per_token * t_tokens
 
 
+def latency_retries(n_failed: Array | float, timeout_s: float,
+                    backoff_s: Array | float) -> Array:
+    """Realized latency of a retried cloud summon's FAILED attempts.
+
+    Each failed attempt burns its full per-attempt deadline ``timeout_s``
+    (an immediate transport error burns ~0, but the deadline is the
+    conservative accounting the gateway uses for timeouts), and the
+    retry loop sleeps ``backoff_s`` total between attempts (sum of the
+    jittered exponential backoffs actually drawn).  Added on top of the
+    successful attempt's Eq. 7-9 latency — or, when every attempt failed,
+    it is the entire cloud-path latency the degraded query carries."""
+    return n_failed * timeout_s + backoff_s
+
+
 def latency_swarm(edge_lats: Array, comm_lats: Array, p: LatencyParams,
                   quorum: int | None = None) -> Array:
     """Eq. 9: max over self+peers of (L_edge^j + L_comm_j) + L_agg.

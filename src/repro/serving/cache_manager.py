@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.distributed import sharding as sh
 from repro.models import transformer as T
+from repro.serving.faults import PoolExhaustedError
 
 
 class EvictedSessionError(ValueError):
@@ -169,7 +170,7 @@ class CachePool:
         K/V and sets pos = -1 — O(n), the paged replacement for the
         monolithic path's O(max_len) ``grow_cache`` copy."""
         if len(self._free) < n:
-            raise RuntimeError(
+            raise PoolExhaustedError(
                 f"cache pool exhausted: need {n} blocks, "
                 f"{len(self._free)}/{self.n_blocks} free — grow pool_blocks, "
                 "release sessions, or enable TTL eviction")
@@ -199,7 +200,7 @@ class CachePool:
 
     def alloc_rows(self, n: int) -> np.ndarray:
         if len(self._free_rows) < n:
-            raise RuntimeError(
+            raise PoolExhaustedError(
                 f"cache pool exhausted: need {n} state rows, "
                 f"{len(self._free_rows)}/{self.n_rows} free")
         ids = np.array([self._heapq.heappop(self._free_rows)

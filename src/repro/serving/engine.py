@@ -45,7 +45,8 @@ from repro.core.uncertainty import UncertaintyConfig
 from repro.distributed import sharding as sh
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
-from repro.serving.cache_manager import PagedHandle
+from repro.serving.cache_manager import EvictedSessionError, PagedHandle
+from repro.serving.faults import FaultPlan, PoolExhaustedError
 from repro.serving.scheduler import ContinuousBatcher, Request
 
 Array = jax.Array
@@ -563,7 +564,14 @@ class InferenceEngine:
         # (the gateway tests assert the probe's swarm round adds zero here),
         # plus grow_copy — whole-cache growth copies, always 0 when paged
         self.counters = {"prefill": 0, "prefill_continue": 0,
-                         "decode_only": 0, "grow_copy": 0}
+                         "decode_only": 0, "grow_copy": 0,
+                         # failure-domain accounting (docs/RUNTIME.md
+                         # "Failure semantics"): admission rounds deferred
+                         # by famine backpressure, requests shed/expired,
+                         # slot-failure requeues, and transparent cold
+                         # re-prefills after a warm handle was evicted
+                         "famine_deferred": 0, "shed": 0, "expired": 0,
+                         "requeued": 0, "reprefill_cold": 0}
         # warm continuation attends CHUNKED over the cache, which needs the
         # cache length divisible by the KV block once it exceeds one block
         # (cold prefill/decode never hit this: they chunk only the span)
@@ -817,6 +825,116 @@ class InferenceEngine:
     def evict_idle_sessions(self, ttl_s: float) -> int:
         """TTL sweep over registered paged sessions (see CachePool)."""
         return self.pool.evict_idle(ttl_s) if self.paged else 0
+
+    # ------------------------------------------------------------------
+    # Session durability: checkpoint/restore through training/checkpoint
+    # ------------------------------------------------------------------
+
+    def checkpoint_session(self, state: SessionState, ckpt_dir: str, *,
+                           step: int = 0, keep: int = 3) -> str:
+        """Persist a session to disk so a chat survives an engine restart.
+
+        Writes through :mod:`repro.training.checkpoint` (atomic publish:
+        npz shards + manifest, tmp-dir ``os.replace``), so a crash
+        mid-save never corrupts the recoverable state.  The cache is
+        saved in its slot-linear MONOLITHIC view — for a paged session
+        the handle's blocks are gathered first — which makes checkpoints
+        portable across engine representations: a session saved on a
+        paged engine restores onto a monolithic one and vice versa.
+
+        Exactness matches the gather/scatter round-trip: global-attention
+        KV and recurrent state rows restore bitwise; a local-attention
+        ring that has already wrapped (``pos > window``) is clamped to
+        its window view.  Inexact handles (mid-chunk stop retirement)
+        keep their ``exact=False`` flag through the round-trip.
+        """
+        from repro.training import checkpoint as ck
+        self._state_kind_check(state)
+        if self.paged:
+            h = state.cache
+            cov_len = int(h.tables.shape[1]) * self.block_len
+            cache = T.paged_gather(
+                self.cfg, self._paged_dev_cache(h.tables, h.rows))
+        else:
+            cov_len = int(state.max_len)
+            cache = state.cache
+        # the per-layer cache dicts hold None for state kinds a layer does
+        # not carry — flatten to the real leaves (checkpoint shards are
+        # arrays only) and rebuild the structure from init_cache on restore
+        tree = {"cache": jax.tree_util.tree_leaves(cache),
+                "pos": np.asarray(state.pos),
+                "cur": np.asarray(state.cur),
+                "last": np.asarray(state.last)}
+        if state.rng is not None:
+            tree["rng"] = np.asarray(state.rng)
+        extra = {"kind": "session", "batch": int(state.batch),
+                 "max_len": int(state.max_len), "offset": int(state.offset),
+                 "cov_len": cov_len, "exact": bool(state.exact),
+                 "paged": bool(self.paged), "has_rng": state.rng is not None}
+        return ck.save(ckpt_dir, step, tree, extra=extra, keep=keep)
+
+    def restore_session(self, ckpt_dir: str,
+                        step: int | None = None) -> SessionState:
+        """Rebuild a checkpointed session on THIS engine (possibly a fresh
+        process: the one that crashed).  Paged engines scatter the saved
+        linear view into freshly allocated pool blocks/rows and register
+        the handle; monolithic engines adopt the arrays directly.  The
+        resumed chat continues bitwise where the round-trip is exact
+        (see ``checkpoint_session``)."""
+        import json
+        import os
+
+        from repro.training import checkpoint as ck
+        if step is None:
+            step = ck.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no session checkpoint in "
+                                        f"{ckpt_dir!r}")
+        with open(os.path.join(ckpt_dir, f"step_{step}",
+                               "manifest.json")) as f:
+            extra = json.load(f)["extra"]
+        if extra.get("kind") != "session":
+            raise ValueError(f"checkpoint at {ckpt_dir!r} step {step} is "
+                             "not a session checkpoint")
+        B, cov_len = int(extra["batch"]), int(extra["cov_len"])
+        ab_cache = jax.eval_shape(lambda: T.init_cache(self.cfg, B, cov_len))
+        ab_leaves, cache_def = jax.tree_util.tree_flatten(ab_cache)
+        abstract = {
+            "cache": ab_leaves,
+            "pos": np.zeros((B,), np.int32),
+            "cur": np.zeros((B,), np.int32),
+            "last": np.zeros((B, self.cfg.vocab_size), np.float32)}
+        if extra.get("has_rng"):
+            abstract["rng"] = np.zeros((2,), np.uint32)
+        tree, _ = ck.restore(ckpt_dir, step, abstract)
+        tree["cache"] = jax.tree_util.tree_unflatten(cache_def,
+                                                     tree["cache"])
+        pos = jnp.asarray(np.asarray(tree["pos"], np.int32))
+        cur = jnp.asarray(np.asarray(tree["cur"], np.int32))
+        last = jnp.asarray(np.asarray(tree["last"], np.float32))
+        rng = tree.get("rng")
+        if rng is not None:
+            rng = jnp.asarray(np.asarray(rng, np.uint32))
+        if self.paged:
+            handle = self.pool.alloc(B, cov_len // self.block_len)
+            dev = self._paged_dev_cache(handle.tables, handle.rows)
+            layers = T.paged_scatter_back(
+                self.cfg, dev, tree["cache"],
+                jnp.zeros((B,), jnp.int32),
+                jnp.full((B,), cov_len, jnp.int32))
+            self.pool.commit(layers)
+            cache, max_len = handle, int(extra["max_len"])
+        else:
+            cache = jax.tree.map(jnp.asarray, tree["cache"])
+            if self.mesh is not None:
+                cache = jax.device_put(cache, self._cache_sh(cache))
+            # the monolithic invariant is cache length == max_len: a
+            # paged-saved session arrives trimmed to its covered length
+            max_len = int(extra["max_len"]) if not extra.get("paged") \
+                else cov_len
+        return SessionState(cache, pos, cur, last, max_len,
+                            int(extra["offset"]), rng=rng,
+                            exact=bool(extra["exact"]))
 
     def fanout(self, state: SessionState, n: int) -> SessionState:
         """Fan a batch-1 session out to ``n`` rows sharing its prefix.
@@ -1234,7 +1352,10 @@ class InferenceEngine:
               batcher: ContinuousBatcher | None = None, n_slots: int = 4,
               decode_chunk: int = 8, stop_token: int | None = None,
               greedy: bool = True, seed: int = 0,
-              session_ttl_s: float | None = None) -> list[dict]:
+              session_ttl_s: float | None = None,
+              faults: FaultPlan | None = None,
+              overload: str = "raise",
+              step_time_ms: float | None = None) -> list[dict]:
         """Streaming entry point: requests flow through a ContinuousBatcher.
 
         Loop: admit queued requests into free slots (each admission is one
@@ -1277,6 +1398,32 @@ class InferenceEngine:
         covered length — no cache extraction copy.  ``session_ttl_s``
         evicts registered sessions idle past the TTL whenever the pool
         runs out of blocks (their handles raise on reuse).
+
+        Failure semantics (docs/RUNTIME.md "Failure semantics"):
+
+        * pool famine is *backpressure*, not a crash — admissions defer
+          while anything is decoding; a hard wedge (nothing decoding,
+          nothing admissible even after the TTL sweep) raises
+          ``PoolExhaustedError`` with ``overload="raise"`` (default) or,
+          with ``overload="shed"``, retires the least-urgent queued
+          request marked ``shed=True`` and keeps going (the gateway's
+          cloud path is the recourse for shed work);
+        * a warm request whose handle was evicted is transparently
+          re-admitted COLD (``Request.cold_prompt`` when provided, else
+          its ``prompt``), counted in ``counters["reprefill_cold"]``;
+          a pure decode-resume with no recoverable prompt retires shed;
+        * ``faults`` injects execution failures (serving/faults.py):
+          "pool"/famine defers one admission round, "session"/evict
+          force-releases the next warm admission's handle, "slot"/fail
+          kills the lowest active slot after the current chunk — its
+          request is requeued and re-admitted off its still-valid warm
+          handle (or cold);
+        * ``step_time_ms`` arms the deadline clock: each decode step
+          advances a simulated clock by that many ms (plus any injected
+          "decode"/straggle delay) and requests whose ``deadline_ms``
+          has passed retire ``shed=True`` — queued ones before taking a
+          slot, active ones mid-decode with what they have.  ``None``
+          (default) keeps deadlines as pure admission ordering.
         """
         if (requests is None) == (batcher is None):
             raise ValueError("pass exactly one of requests / batcher")
@@ -1301,6 +1448,11 @@ class InferenceEngine:
             off = r.state.offset if r.state is not None else 0
             sb = bucket_len(len(r.prompt), gran) if r.prompt else 0
             n = self._cache_len(off + sb, r.max_new)
+            if r.cold_prompt:
+                # the slot must also fit the cold-re-prefill fallback
+                # (full conversation) should the warm handle be lost
+                n = max(n, self._cache_len(
+                    bucket_len(len(r.cold_prompt), gran), r.max_new))
             return max(n, r.state.max_len) if r.state is not None else n
 
         max_len = max(_need(r) for r in pending)
@@ -1348,6 +1500,8 @@ class InferenceEngine:
                 out = {"rid": req.rid,
                        "tokens": np.asarray(req.generated, np.int32),
                        "u": float(U.combine_terms(h / d, v / d, self.ucfg))}
+                if req.shed:
+                    out["shed"] = True
                 if req.rid in states:
                     out["state"] = states.pop(req.rid)
                 results.append(out)
@@ -1368,33 +1522,78 @@ class InferenceEngine:
                 promised[0] += 1
             return ok
 
+        now_ms = 0.0
+
         while not batcher.idle:
-            promised[0] = 0
-            admitted = batcher.admit(fits=fits if paged else None)
-            if paged and not admitted and not batcher.active() \
-                    and batcher.queue:
-                # pool famine with nothing decoding: TTL-evict idle
-                # sessions to recover blocks — except the handles queued
-                # warm requests still reference — then retry once
-                if session_ttl_s is not None:
-                    keep = {r.state.cache.sid for r in batcher.queue
-                            if r.state is not None
-                            and isinstance(r.state.cache, PagedHandle)}
-                    self.pool.evict_idle(session_ttl_s, exclude=keep)
+            if (faults is not None and batcher.queue
+                    and faults.consume("pool") is not None):
+                # injected famine: this admission round sees zero free
+                # blocks.  Backpressure, not a crash — queued requests
+                # simply wait the round out while anything active keeps
+                # decoding; with nothing active we skip the (empty-slot)
+                # dispatch entirely.
+                self.counters["famine_deferred"] += len(batcher.queue)
+                admitted = []
+                if not batcher.active():
+                    continue
+            else:
                 promised[0] = 0
-                admitted = batcher.admit(fits=fits)
-                if not admitted:
-                    raise RuntimeError(
-                        f"cache pool exhausted: {self.pool.blocks_in_use}/"
-                        f"{self.pool.n_blocks} blocks held by "
-                        f"{self.pool.live_sessions} sessions and no slot "
-                        "can admit — grow pool_blocks, release sessions, "
-                        "or pass session_ttl_s")
+                admitted = batcher.admit(fits=fits if paged else None)
+                if paged and not admitted and not batcher.active() \
+                        and batcher.queue:
+                    # pool famine with nothing decoding: TTL-evict idle
+                    # sessions to recover blocks — except the handles queued
+                    # warm requests still reference — then retry once
+                    if session_ttl_s is not None:
+                        keep = {r.state.cache.sid for r in batcher.queue
+                                if r.state is not None
+                                and isinstance(r.state.cache, PagedHandle)}
+                        self.pool.evict_idle(session_ttl_s, exclude=keep)
+                    promised[0] = 0
+                    admitted = batcher.admit(fits=fits)
+                    if not admitted:
+                        if overload == "shed" \
+                                and batcher.shed_one() is not None:
+                            # hard wedge: retire the least-urgent queued
+                            # request with shed=True and keep serving —
+                            # the caller reroutes shed work (cloud path)
+                            self.counters["shed"] += 1
+                            continue
+                        raise PoolExhaustedError(
+                            f"cache pool exhausted: "
+                            f"{self.pool.blocks_in_use}/"
+                            f"{self.pool.n_blocks} blocks held by "
+                            f"{self.pool.live_sessions} sessions and no "
+                            "slot can admit — grow pool_blocks, release "
+                            "sessions, or pass session_ttl_s")
             for i in admitted:
                 req = batcher.slots[i]
                 st = req.state
+                if (st is not None and faults is not None
+                        and isinstance(st.cache, PagedHandle)
+                        and faults.consume("session") is not None):
+                    # injected forced eviction: the handle is genuinely
+                    # released so the recovery below is the real path
+                    self.release(st)
                 if st is not None:
-                    self._check_state(st, extension=not req.prompt)
+                    try:
+                        self._check_state(st, extension=not req.prompt)
+                    except EvictedSessionError:
+                        # the session handle is gone (TTL sweep, forced
+                        # eviction): transparently re-admit COLD from the
+                        # full-conversation prompt instead of failing
+                        req.state = st = None
+                        if req.cold_prompt is not None:
+                            req.prompt = list(req.cold_prompt)
+                        if not req.prompt:
+                            # decode-resume with nothing to re-prefill
+                            req.done = True
+                            req.shed = True
+                            batcher.finished.append(req)
+                            batcher.slots[i] = None
+                            self.counters["shed"] += 1
+                            continue
+                        self.counters["reprefill_cold"] += 1
                 if paged:
                     if st is not None:
                         # warm admission: the slot's table row shares the
@@ -1541,6 +1740,45 @@ class InferenceEngine:
                         extract(cache, i), jnp.full((1,), end, jnp.int32),
                         cur[i:i + 1], last[i:i + 1], max_len, end,
                         exact=exact)
+
+            def _free_slot(i: int):
+                # drop a live slot's pool resources and repoint it at the
+                # sentinels (its garbage decode keeps running, writes drop)
+                if paged and slot_run[i] is not None:
+                    blocks, row = slot_run[i]
+                    self.pool.free_blocks(blocks)
+                    self.pool.free_rows(np.array([row]))
+                    slot_tables[i, :] = self.pool.n_blocks
+                    slot_rows[i] = self.pool.n_rows
+                    slot_run[i] = None
+                pos0.pop(i, None)
+
+            if step_time_ms is not None:
+                # simulated wall clock for deadline expiry: decode steps
+                # cost step_time_ms each, plus any injected straggle
+                now_ms += chunk * float(step_time_ms)
+                if faults is not None:
+                    ev = faults.consume("decode")
+                    if ev is not None:
+                        now_ms += 1000.0 * float(ev.delay_s)
+                for i, req in batcher.expire(now_ms):
+                    self.counters["expired"] += 1
+                    if i is not None:
+                        _free_slot(i)
+
+            if faults is not None and faults.consume("slot") is not None:
+                # injected slot failure: the lowest active slot dies after
+                # this chunk.  Its decode progress is lost; the request
+                # goes back in the queue and re-admits off its warm handle
+                # when that is still valid (continuation prefill), else
+                # cold (the admission path handles the evicted case).
+                act = batcher.active()
+                if act:
+                    i, req = act[0]
+                    _free_slot(i)
+                    acc.pop(req.rid, None)
+                    batcher.requeue(i)
+                    self.counters["requeued"] += 1
             drain()
         drain()
         return results

@@ -29,8 +29,15 @@ from repro.core.router import (CLOUD, CLOUD_SAFETY, LOCAL, REFUSE, SWARM,
 from repro.core.safety import safety_score
 from repro.data.workload import REFUSAL, is_correct
 from repro.serving.engine import InferenceEngine
+from repro.serving.faults import (CircuitBreaker, CloudUnavailableError,
+                                  FaultPlan, HealthRegistry, RetryPolicy)
 from repro.serving.simulator import NetworkSimulator
 from repro.serving.swarm import SwarmExecutor, pad_prompts, truncate_at_stop
+
+#: engine-side failure counters the gateway folds into GatewayLog.faults
+#: (per-batch deltas summed over swarm members)
+_ENGINE_FAULT_KEYS = ("famine_deferred", "shed", "requeued",
+                      "reprefill_cold", "expired")
 
 
 @dataclasses.dataclass
@@ -45,6 +52,21 @@ class GatewayLog:
     correct: np.ndarray         # (Q,) bool (False where no gold)
     answers: np.ndarray         # (Q, N) final answer tokens
     consensus: np.ndarray       # (Q,) best cluster score (NaN if no swarm)
+    # failure-domain record (docs/RUNTIME.md "Failure semantics"): retry/
+    # degradation/shed counters for this batch — cloud summon attempts and
+    # failures, circuit-breaker transitions, member casualties/straggle,
+    # and the swarm engines' famine/shed/requeue/re-prefill deltas.
+    faults: dict = dataclasses.field(default_factory=dict)
+    # (Q,) bool: the query got a *served* response (a safety-policy refusal
+    # counts as served; a degradation-forced refusal — cloud required but
+    # unreachable after retries — does not)
+    answered: np.ndarray | None = None
+
+    def availability(self) -> float:
+        """Fraction of queries that received a served answer (Table V-style
+        robustness metric: accuracy tells how good the answers were,
+        availability tells how many queries got one at all)."""
+        return 1.0 if self.answered is None else float(self.answered.mean())
 
     def cloud_usage(self) -> float:
         return float(np.mean((self.decision == CLOUD)
@@ -77,9 +99,36 @@ class Gateway:
     max_new: int = 8
     quorum: int | None = None               # beyond-paper straggler mitigation
     distill_buffer: DistillBuffer = dataclasses.field(default_factory=DistillBuffer)
+    # failure-domain runtime (serving/faults.py).  ``faults=None`` (or an
+    # empty plan) leaves every code path bitwise-identical to the pre-
+    # fault-injection gateway: the retry loop's first attempt is the old
+    # single call, backoff jitter draws only from the PLAN's rng (never
+    # the simulator's), and the breaker/health registry only change
+    # routing after an actual failure.
+    faults: FaultPlan | None = None
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    breaker: CircuitBreaker = dataclasses.field(default_factory=CircuitBreaker)
 
     def __post_init__(self):
         self.budget = budget_lib.init_budget(self.budget_total)
+        self._tick = 0
+        self.health = HealthRegistry(len(self.swarm.members))
+        if self.faults is not None and self.swarm.faults is None:
+            self.swarm.faults = self.faults
+
+    def reset_fault_state(self):
+        """Rewind everything a determinism re-run needs fresh: budget,
+        batch tick, breaker, health registry, the fault plan's schedule
+        and rng, and the network simulator's seeded state.  Two identical
+        workload runs bracketed by this produce identical winners and
+        identical fault/retry/shed counters."""
+        self.budget = budget_lib.init_budget(self.budget_total)
+        self._tick = 0
+        self.breaker.reset()
+        self.health = HealthRegistry(len(self.swarm.members))
+        self.sim.reset()
+        if self.faults is not None:
+            self.faults.reset()
 
     # ------------------------------------------------------------------
     def answer_batch(self, queries: list[dict], seed: int = 0) -> GatewayLog:
@@ -97,7 +146,29 @@ class Gateway:
         prompts = pad_prompts([q["prompt"] for q in queries])
         plen = (prompts != 0).sum(axis=1)
         self.sim.tick()
+        self._tick += 1
+        self.health.tick()
+        if self.faults is not None:
+            self.faults.tick()
+        fc = {"cloud_attempts": 0, "cloud_retries": 0, "cloud_failures": 0,
+              "cloud_exhausted": 0, "breaker_opened": 0,
+              "breaker_open_skips": 0, "degraded_to_swarm": 0,
+              "degraded_to_local": 0, "degraded_refused": 0,
+              "member_casualties": 0, "member_straggle_s": 0.0}
+        fc.update({k: 0 for k in _ENGINE_FAULT_KEYS})
+        eng0 = self._member_counters()
+        brk0 = self.breaker.opened_count
+        answered = np.ones((B,), bool)
         wan_ok = bool(self.sim.wan_up)
+        # the WAN gate is one input to the cloud-availability signal; the
+        # circuit breaker (opened by exhausted summon retries, half-open
+        # after cooldown_ticks) is the other.  An open breaker degrades
+        # routing exactly like an outage: the O5 chain sends non-risk
+        # cloud aspirants to the swarm and risk queries to REFUSE.
+        breaker_ok = self.breaker.allow(self._tick)
+        if wan_ok and not breaker_ok:
+            fc["breaker_open_skips"] += 1
+        cloud_ok = wan_ok and breaker_ok
 
         # --- safety gate (Eq. 5); right-aligned to match classifier training
         rp = pad_prompts([q["prompt"] for q in queries], align="right")
@@ -121,7 +192,7 @@ class Gateway:
             + self.lat_params.cloud_per_token * (plen + self.max_new)
         phase_a = router_lib.route(
             jnp.asarray(u), jnp.asarray(s), cfg=self.router_cfg,
-            budget=self.budget, wan_ok=wan_ok,
+            budget=self.budget, wan_ok=cloud_ok,
             est_cloud_cost=jnp.asarray(est_cost),
             l_edge=jnp.asarray(probe_lat),
             l_cloud=jnp.asarray(l_cloud_est))
@@ -152,24 +223,46 @@ class Gateway:
                    if m is self.probe}
             states = {j: self.probe.state_select(probe_res["state"], idx)
                       for j in pre}
+            # membership = simulator availability AND health: a member
+            # past its consecutive-failure threshold is skipped until its
+            # next half-open recovery probe (faults.HealthRegistry)
+            up = (np.asarray(self.sim.member_up, bool)
+                  & self.health.available())
             sw = self.swarm.collaborate(prompts[swarm_mask], self.max_new,
-                                        member_mask=self.sim.member_up,
+                                        member_mask=up,
                                         seed=seed, precomputed=pre,
                                         states=states)
             consensus[swarm_mask] = sw["consensus_score"]
-            # Eq. 9 waits only on members that are actually up — down peers
-            # must not contribute an edge-latency term (fault injection was
-            # overstating swarm latency by tiling over all n_members)
-            up = np.asarray(self.sim.member_up, bool)
-            n_up = int(up.sum())
+            cas = sw.get("casualties", [])
+            strag = sw.get("straggle_s", {})
+            for j in cas:
+                self.health.record_failure(j)
+                fc["member_casualties"] += 1
+            # Eq. 9 waits only on members that actually returned — down
+            # peers AND mid-round casualties must not contribute an
+            # edge-latency term (the crashed member's work is refunded;
+            # quorum is satisfied by the survivors)
+            live = up.copy()
+            live[list(cas)] = False
+            n_up = int(live.sum())
             if n_up > 0:
                 edge_l = self.sim.edge_latency(
                     np.tile((plen[swarm_mask] + self.max_new)[:, None],
                             (1, n_up)))
                 comm_l = self.sim.peer_comm(int(swarm_mask.sum()), n_up)
+                # an injected straggler's delay rides on its comm term
+                live_idx = np.where(live)[0]
+                for c, j in enumerate(live_idx):
+                    if j in strag:
+                        comm_l[:, c] = comm_l[:, c] + strag[j]
+                        fc["member_straggle_s"] += float(strag[j])
                 sw_lat = np.asarray(cm.latency_swarm(
                     jnp.asarray(edge_l), jnp.asarray(comm_l), self.lat_params,
                     quorum=self.quorum))
+                # survivors feed the health registry's EWMA latency prior
+                for c, j in enumerate(live_idx):
+                    self.health.record_success(
+                        j, float(edge_l[:, c].mean() + comm_l[:, c].mean()))
             else:
                 sw_lat = np.full((int(swarm_mask.sum()),),
                                  self.lat_params.agg_overhead)
@@ -186,37 +279,124 @@ class Gateway:
         cons_arr = np.where(np.isnan(consensus), 1.0, consensus)
         phase_b = router_lib.post_consensus(
             jnp.asarray(decision), jnp.asarray(cons_arr, np.float32),
-            cfg=self.router_cfg, budget=self.budget, wan_ok=wan_ok,
+            cfg=self.router_cfg, budget=self.budget, wan_ok=cloud_ok,
             est_cloud_cost=jnp.asarray(est_cost))
-        decision = np.asarray(phase_b.decision)
+        # np.array (copy): the degraded-summon path rewrites decisions in
+        # place, and np.asarray over a jax array is read-only
+        decision = np.array(phase_b.decision)
         self.budget = phase_b.budget
 
-        # --- cloud execution (Tier 2) ---
+        # --- cloud execution (Tier 2): retrying summon ---
+        # bounded attempts with a per-attempt deadline and jittered
+        # exponential backoff (faults.RetryPolicy).  The first attempt IS
+        # the old single call — with no injected fault nothing below adds
+        # latency, cost or rng draws.  Exhausted retries trip the circuit
+        # breaker and degrade the batch: cloud -> swarm (queries that went
+        # through a round keep their consensus winner) -> local (probe
+        # answer); risk queries that *required* the cloud are refused,
+        # mirroring the router's O5 outage chain.
         cloud_mask = (decision == CLOUD) | (decision == CLOUD_SAFETY)
         if cloud_mask.any() and self.cloud is not None:
-            cl = self.cloud.generate(prompts[cloud_mask], self.max_new,
-                                     seed=seed)
-            answers[cloud_mask] = truncate_at_stop(cl["tokens"], stop)
-            latency[cloud_mask] += self.sim.cloud_latency(
-                plen[cloud_mask] + self.max_new)
-            cost[cloud_mask] += est_cost[cloud_mask]
-            # distillation feedback loop (Sec. IV-H)
-            for qi in np.where(cloud_mask)[0]:
-                self.distill_buffer.log(queries[qi]["prompt"],
-                                        answers[qi].tolist(),
-                                        meta={"u": float(u[qi])})
+            cl = None
+            attempts = 0
+            backoff_total = 0.0
+            while True:
+                attempts += 1
+                fc["cloud_attempts"] += 1
+                try:
+                    if self.faults is None:
+                        cl = self.cloud.generate(prompts[cloud_mask],
+                                                 self.max_new, seed=seed)
+                    else:
+                        cl, _ = self.faults.call(
+                            "cloud",
+                            lambda: self.cloud.generate(
+                                prompts[cloud_mask], self.max_new,
+                                seed=seed))
+                    break
+                except CloudUnavailableError:
+                    fc["cloud_failures"] += 1
+                    if attempts >= self.retry.max_attempts:
+                        break
+                    fc["cloud_retries"] += 1
+                    backoff_total += self.retry.backoff(
+                        attempts - 1,
+                        self.faults.rng if self.faults is not None else None)
+            failed = attempts - (1 if cl is not None else 0)
+            if failed:
+                # realized retry time: every failed attempt burns its
+                # deadline, plus the backoff sleeps between attempts —
+                # and each failed summon still shipped the prompt
+                # (Eq. 7 prompt-token cost, charged against the budget)
+                extra = float(np.asarray(cm.latency_retries(
+                    float(failed), self.retry.timeout_s, backoff_total)))
+                latency[cloud_mask] += extra
+                retry_cost = failed * np.asarray(cm.cost_cloud(
+                    jnp.asarray(plen[cloud_mask], jnp.float32), 0.0,
+                    self.cost_params))
+                cost[cloud_mask] += retry_cost
+                self.budget = self.budget._replace(
+                    used=self.budget.used + float(retry_cost.sum()))
+            if cl is not None:
+                self.breaker.record_success()
+                answers[cloud_mask] = truncate_at_stop(cl["tokens"], stop)
+                latency[cloud_mask] += self.sim.cloud_latency(
+                    plen[cloud_mask] + self.max_new)
+                cost[cloud_mask] += est_cost[cloud_mask]
+                # distillation feedback loop (Sec. IV-H)
+                for qi in np.where(cloud_mask)[0]:
+                    self.distill_buffer.log(queries[qi]["prompt"],
+                                            answers[qi].tolist(),
+                                            meta={"u": float(u[qi])})
+            else:
+                fc["cloud_exhausted"] += 1
+                self.breaker.record_failure(self._tick)
+                # refund the completion cost the batch never incurred
+                self.budget = self.budget._replace(
+                    used=jnp.maximum(
+                        self.budget.used - float(est_cost[cloud_mask].sum()),
+                        0.0))
+                # graceful degradation: answers[] still holds each query's
+                # best pre-cloud candidate (swarm winner for escalations,
+                # probe answer otherwise) — reroute instead of failing
+                had_swarm = ~np.isnan(consensus)
+                was_safety = decision == CLOUD_SAFETY
+                to_swarm = cloud_mask & had_swarm & ~was_safety
+                to_local = cloud_mask & ~had_swarm & ~was_safety
+                to_refuse = cloud_mask & was_safety
+                decision[to_swarm] = SWARM
+                decision[to_local] = LOCAL
+                decision[to_refuse] = REFUSE
+                answered[to_refuse] = False
+                fc["degraded_to_swarm"] += int(to_swarm.sum())
+                fc["degraded_to_local"] += int(to_local.sum())
+                fc["degraded_refused"] += int(to_refuse.sum())
 
         # --- refusals ---
         refuse_mask = decision == REFUSE
         answers[refuse_mask] = REFUSAL
 
+        fc["breaker_opened"] = self.breaker.opened_count - brk0
+        eng1 = self._member_counters()
+        for k in _ENGINE_FAULT_KEYS:
+            fc[k] = eng1[k] - eng0[k]
         correct = np.array([is_correct(answers[i], queries[i].get("gold"))
                             for i in range(B)])
         return GatewayLog(
             decision=decision, u=u, safety=s, latency=latency, cost=cost,
             prompt_len=plen,
             category=[q.get("category", "easy") for q in queries],
-            correct=correct, answers=answers, consensus=consensus)
+            correct=correct, answers=answers, consensus=consensus,
+            faults=fc, answered=answered)
+
+    def _member_counters(self) -> dict:
+        """Sum of the swarm engines' failure counters (delta-tracked per
+        batch so GatewayLog.faults reports this batch's events only)."""
+        tot = dict.fromkeys(_ENGINE_FAULT_KEYS, 0)
+        for m in self.swarm.members:
+            for k in _ENGINE_FAULT_KEYS:
+                tot[k] += m.counters.get(k, 0)
+        return tot
 
 
 # ---------------------------------------------------------------------------

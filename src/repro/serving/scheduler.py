@@ -20,12 +20,23 @@ import numpy as np
 
 
 def select_peers(pred_latency: np.ndarray, k: int, l_max: float,
-                 available: np.ndarray | None = None) -> np.ndarray:
+                 available: np.ndarray | None = None,
+                 health: object | None = None) -> np.ndarray:
     """pred_latency (n,) predicted per-peer response time -> bool mask of
-    up-to-k chosen peers whose prediction fits the deadline."""
+    up-to-k chosen peers whose prediction fits the deadline.
+
+    ``health`` (optional ``faults.HealthRegistry``) refines selection:
+    unhealthy peers are excluded until their next half-open recovery
+    probe (``health.available()``), and a peer's observed EWMA latency
+    replaces the static prediction where one has been recorded — a
+    chronically slow peer stops being chosen even while nominally up."""
     n = len(pred_latency)
     if available is None:
         available = np.ones((n,), bool)
+    if health is not None:
+        available = available & health.available()
+        ewma = np.asarray(health.ewma, float)
+        pred_latency = np.where(np.isnan(ewma), pred_latency, ewma)
     order = np.argsort(pred_latency)
     chosen = np.zeros((n,), bool)
     taken = 0
@@ -59,6 +70,14 @@ class Request:
     # absolute caller-defined clock (only compared between requests).
     priority: int = 0
     deadline_ms: float | None = None
+    # set True when the scheduler gave up on the request (deadline expired
+    # mid-queue/mid-decode, or famine shed) — it retires with whatever it
+    # had; the gateway's cloud path is the recourse for shed work.
+    shed: bool = False
+    # full-conversation prompt for a warm request: if its session handle
+    # is lost (eviction, slot failure), serve() transparently re-admits it
+    # COLD from this prompt instead of failing the request.
+    cold_prompt: list | None = None
 
 
 class ContinuousBatcher:
@@ -75,6 +94,10 @@ class ContinuousBatcher:
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        # failure-domain accounting (see docs/RUNTIME.md "Failure
+        # semantics"): expired = deadline passed, shed = famine overflow,
+        # requeued = slot died mid-decode and the request went back in line.
+        self.counters = {"expired": 0, "shed": 0, "requeued": 0}
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -127,6 +150,63 @@ class ContinuousBatcher:
                 s.done = True
                 self.finished.append(s)
                 self.slots[i] = None
+
+    def expire(self, now_ms: float) -> list[tuple[int | None, Request]]:
+        """Retire requests whose ``deadline_ms`` has passed at ``now_ms``.
+
+        Queued requests are dropped before ever taking a slot; active
+        requests are retired mid-decode with whatever tokens they have
+        (slot freed immediately).  Both come back marked ``shed=True``
+        through ``drain_finished``.  Returns ``(slot_id | None, request)``
+        pairs so the engine can release pool resources of active
+        casualties (queued ones hold none)."""
+        out: list[tuple[int | None, Request]] = []
+        for j in range(len(self.queue) - 1, -1, -1):
+            r = self.queue[j]
+            if r.deadline_ms is not None and r.deadline_ms < now_ms:
+                self.queue.pop(j)
+                out.append((None, r))
+        for i, s in enumerate(self.slots):
+            if (s is not None and not s.done and s.deadline_ms is not None
+                    and s.deadline_ms < now_ms):
+                out.append((i, s))
+                self.slots[i] = None
+        for _, r in out:
+            r.done = True
+            r.shed = True
+            self.finished.append(r)
+            self.counters["expired"] += 1
+        return out
+
+    def shed_one(self) -> Request | None:
+        """Drop the least-urgent queued request (famine overflow control):
+        latest deadline, then highest priority value, then latest arrival.
+        It retires ``shed=True`` with no tokens — the caller decides the
+        recourse (the gateway reroutes shed work to the cloud path)."""
+        if not self.queue:
+            return None
+        j = max(range(len(self.queue)),
+                key=lambda jj: (self._urgency(self.queue[jj]), jj))
+        r = self.queue.pop(j)
+        r.done = True
+        r.shed = True
+        self.finished.append(r)
+        self.counters["shed"] += 1
+        return r
+
+    def requeue(self, i: int) -> Request | None:
+        """Put slot ``i``'s request back in the queue (slot failure):
+        decode progress is lost, but a still-valid warm handle means
+        re-admission costs one continuation prefill, not a full one."""
+        r = self.slots[i]
+        if r is None:
+            return None
+        self.slots[i] = None
+        r.generated = []
+        r.done = False
+        self.queue.append(r)
+        self.counters["requeued"] += 1
+        return r
 
     @property
     def idle(self) -> bool:

@@ -6,11 +6,18 @@ so end-to-end latencies come from a calibrated stochastic model instead
 
   * WAN: lognormal RTT + two-state Markov availability (outages, O5 tests)
   * local links: per-peer Gaussian jitter (Eq. 9's L_comm)
-  * nodes: Bernoulli-per-window failures with exponential recovery
-    (straggler/fault injection for the quorum experiments)
+  * nodes: per-tick Bernoulli failure AND recovery — a down node comes
+    back with probability ``node_recover_p`` each tick, i.e. downtime is
+    geometrically distributed with mean ``1 / node_recover_p`` ticks
+    (the discrete-time analogue of exponential recovery; see
+    ``SimConfig.mean_ticks_to_recover``).  The WAN uses the same
+    two-state chain with ``wan_outage_p`` / ``wan_recover_p``.
 
 All routing/consensus/budget code that the simulator drives is the REAL
-production code — only link/compute *timings* are synthetic.
+production code — only link/compute *timings* are synthetic.  Failures
+here only shape *availability and latency accounting*; execution-level
+failures (a member call actually raising mid-round) are injected by
+serving/faults.py.
 """
 
 from __future__ import annotations
@@ -24,22 +31,40 @@ from repro.core.cost_model import LatencyParams
 
 @dataclasses.dataclass
 class SimConfig:
+    """Two-state Markov availability knobs, one tick per gateway batch.
+
+    All four transition probabilities are per-tick Bernoulli draws, so
+    sojourn times are geometric: a WAN outage lasts ``1/wan_recover_p``
+    ticks in expectation, a node outage ``1/node_recover_p`` ticks.
+    """
+
     seed: int = 0
-    wan_outage_p: float = 0.02       # P(up -> down) per query
-    wan_recover_p: float = 0.5       # P(down -> up) per query
-    node_fail_p: float = 0.0         # per-query member failure probability
-    node_recover_p: float = 0.5
+    wan_outage_p: float = 0.02       # P(up -> down) per tick
+    wan_recover_p: float = 0.5       # P(down -> up) per tick
+    node_fail_p: float = 0.0         # P(up -> down) per tick, per member
+    node_recover_p: float = 0.5      # P(down -> up) per tick, per member
     straggler_p: float = 0.05        # peer responds ~5x slower
     straggler_mult: float = 5.0
+
+    def mean_ticks_to_recover(self, kind: str = "node") -> float:
+        """Expected outage length in ticks (geometric mean sojourn):
+        ``1 / recover_p``, infinite when recovery is disabled."""
+        p = self.node_recover_p if kind == "node" else self.wan_recover_p
+        return float("inf") if p <= 0 else 1.0 / p
 
 
 class NetworkSimulator:
     def __init__(self, cfg: SimConfig, lat: LatencyParams, n_members: int):
         self.cfg = cfg
         self.lat = lat
-        self.rng = np.random.RandomState(cfg.seed)
+        self.n_members = n_members
+        self.reset()
+
+    def reset(self):
+        """Rewind to the seeded initial state (determinism re-runs)."""
+        self.rng = np.random.RandomState(self.cfg.seed)
         self.wan_up = True
-        self.member_up = np.ones((n_members,), bool)
+        self.member_up = np.ones((self.n_members,), bool)
 
     # --- state evolution (called once per query/batch tick) ---------------
     def tick(self):

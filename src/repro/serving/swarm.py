@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import uncertainty as U
 from repro.core.consensus import PAD, batched_consensus
 from repro.serving.engine import InferenceEngine
+from repro.serving.faults import FaultPlan, MemberDownError
 from repro.serving.scheduler import Request
 
 
@@ -71,6 +72,15 @@ class SwarmExecutor:
     stop_token: int | None = None
     streaming: bool = False      # route rounds through each member's serve()
     serve_slots: int = 4         # decode slots when streaming
+    # execution-level fault injection (serving/faults.py): member calls
+    # run through plan sites "member:<j>" — a crash/timeout drops that
+    # member's candidates for the round (quorum salvage: consensus
+    # renormalizes over survivors), a straggle reports its delay for the
+    # gateway's Eq. 9 accounting.  Streaming members forward the plan
+    # into serve() (famine/evict/slot sites) with overload="shed" so a
+    # member-side famine degrades to PAD answers instead of crashing
+    # the round.  None (default) leaves execution bitwise untouched.
+    faults: FaultPlan | None = None
 
     def collaborate(self, prompts: np.ndarray, max_new: int, *,
                     member_mask: np.ndarray | None = None,
@@ -116,47 +126,71 @@ class SwarmExecutor:
 
         answers = np.full((B, n, max_new), PAD, np.int32)
         u = np.ones((B, n), np.float32)            # unavailable => weight w_min
+        casualties: list[int] = []
+        straggle: dict[int, float] = {}
         for j, eng in enumerate(self.members):
             if not member_mask[j]:
                 continue
-            if precomputed is not None and j in precomputed:
-                toks, uj = precomputed[j][0], precomputed[j][1]
-                toks = np.asarray(toks, np.int32)
-                n_pre = toks.shape[1]
-                if n_pre < max_new:
-                    if states is None or j not in states:
-                        raise ValueError(
-                            f"member {j}: precomputed answer covers {n_pre}"
-                            f" < {max_new} tokens and no session state was"
-                            " provided to extend it from")
-                    # decode-only continuation off the warm cache: the
-                    # extension emits exactly the tokens a longer original
-                    # generation would have produced next — zero prefills
-                    ext = eng.generate(None, max_new - n_pre,
-                                       state=states[j], seed=seed + j)
-                    pre_toks = toks
-                    toks = np.concatenate([toks, ext["tokens"]], axis=1)
-                    if len(precomputed[j]) > 2:
-                        uj = self._deepened_u(eng, pre_toks, ext,
-                                              precomputed[j][2], uj)
-            elif self.streaming:
-                # the padded row (incl. leading PADs) is the request prompt,
-                # so per-request absorption matches batched generation
-                reqs = [Request(rid=i, prompt=prompts[i].tolist(),
-                                max_new=max_new) for i in range(B)]
-                fin = eng.serve(reqs, n_slots=min(B, self.serve_slots),
-                                stop_token=self.stop_token, seed=seed + j)
-                toks = np.zeros((B, max_new), np.int32)
-                uj = np.ones((B,), np.float32)
-                for r in fin:
-                    toks[r["rid"], :len(r["tokens"])] = r["tokens"]
-                    uj[r["rid"]] = r["u"]
-            else:
+
+            def run(j=j, eng=eng):
+                if precomputed is not None and j in precomputed:
+                    toks, uj = precomputed[j][0], precomputed[j][1]
+                    toks = np.asarray(toks, np.int32)
+                    n_pre = toks.shape[1]
+                    if n_pre < max_new:
+                        if states is None or j not in states:
+                            raise ValueError(
+                                f"member {j}: precomputed answer covers "
+                                f"{n_pre} < {max_new} tokens and no session"
+                                " state was provided to extend it from")
+                        # decode-only continuation off the warm cache: the
+                        # extension emits exactly the tokens a longer
+                        # original generation would have produced next —
+                        # zero prefills
+                        ext = eng.generate(None, max_new - n_pre,
+                                           state=states[j], seed=seed + j)
+                        pre_toks = toks
+                        toks = np.concatenate([toks, ext["tokens"]], axis=1)
+                        if len(precomputed[j]) > 2:
+                            uj = self._deepened_u(eng, pre_toks, ext,
+                                                  precomputed[j][2], uj)
+                    return toks, uj
+                if self.streaming:
+                    # the padded row (incl. leading PADs) is the request
+                    # prompt, so per-request absorption matches batched
+                    # generation
+                    reqs = [Request(rid=i, prompt=prompts[i].tolist(),
+                                    max_new=max_new) for i in range(B)]
+                    fin = eng.serve(reqs, n_slots=min(B, self.serve_slots),
+                                    stop_token=self.stop_token, seed=seed + j,
+                                    faults=self.faults, overload="shed")
+                    toks = np.zeros((B, max_new), np.int32)
+                    uj = np.ones((B,), np.float32)
+                    for r in fin:
+                        if r.get("shed"):
+                            continue   # PAD answer + u=1 => w_min sentinel
+                        toks[r["rid"], :len(r["tokens"])] = r["tokens"]
+                        uj[r["rid"]] = r["u"]
+                    return toks, uj
                 res = eng.generate(prompts, max_new, seed=seed + j)
-                toks = res["tokens"]
                 # mask u to the answer span so batched and streaming
                 # rounds score identically (no post-answer entropy)
-                uj = self.member_u(eng, res)
+                return res["tokens"], self.member_u(eng, res)
+
+            if self.faults is None:
+                toks, uj = run()
+            else:
+                try:
+                    (toks, uj), delay = self.faults.call(f"member:{j}", run)
+                except MemberDownError:
+                    # casualty: keep PAD answers + u=1.0, the same
+                    # sentinel-cluster/w_min floor an unavailable member
+                    # gets — consensus renormalizes over survivors and
+                    # quorum is satisfied by whoever returned
+                    casualties.append(j)
+                    continue
+                if delay:
+                    straggle[j] = delay
             answers[:, j, :] = truncate_at_stop(np.asarray(toks, np.int32),
                                                 self.stop_token)
             u[:, j] = uj
@@ -175,6 +209,12 @@ class SwarmExecutor:
             "winner_member": rep,                     # (B,)
             "consensus_score": np.asarray(res.best_score),  # (B,)
             "scores": np.asarray(res.scores),         # (B, n)
+            # failure-domain report: members that crashed mid-round (the
+            # gateway refunds their Eq. 9 edge-latency term and records
+            # the failure in its health registry) and injected straggler
+            # delays in seconds (added to that member's comm term)
+            "casualties": casualties,                 # list[int]
+            "straggle_s": straggle,                   # {member: seconds}
         }
 
     def _deepened_u(self, eng: InferenceEngine, pre_toks: np.ndarray,

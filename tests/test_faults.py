@@ -1,0 +1,387 @@
+"""Failure-domain tests (docs/RUNTIME.md "Failure semantics"):
+
+* fault-injection primitives — FaultPlan events, typed exceptions,
+  RetryPolicy backoff, CircuitBreaker state machine, HealthRegistry
+* serve()-level semantics — famine backpressure, forced eviction ->
+  cold re-prefill, slot failure -> requeue, deadline expiry and
+  priority preemption under injected stragglers, typed famine raise
+* the famine -> TTL-evict -> retry regression (queued warm handles
+  excluded from the sweep)
+* swarm casualty salvage — consensus over survivors, straggle report
+* session durability — checkpoint/restore across engine restarts and
+  representations (paged <-> monolithic), resumed chat bitwise
+* healthy-path parity — an empty FaultPlan changes nothing, bitwise
+"""
+
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.core.uncertainty import UncertaintyConfig
+from repro.models import transformer as T
+from repro.serving.engine import InferenceEngine
+from repro.serving.faults import (CircuitBreaker, CloudUnavailableError,
+                                  FaultEvent, FaultPlan, HealthRegistry,
+                                  MemberDownError, PoolExhaustedError,
+                                  RetryPolicy, ServingFault)
+from repro.serving.scheduler import Request, select_peers
+from repro.serving.swarm import SwarmExecutor, pad_prompts
+
+BLOCK = 16
+PROMPTS = [[3, 20, 195, 2], [3, 21, 196, 199, 2], [7, 9, 2]]
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = dataclasses.replace(C.get_smoke("smollm-135m"), vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, UncertaintyConfig(mode="distribution")
+
+
+def _engine(base, paged=True, **kw):
+    cfg, params, ucfg = base
+    if paged:
+        kw.setdefault("block_len", BLOCK)
+    return InferenceEngine("t", cfg, params, ucfg, paged=paged, **kw)
+
+
+@pytest.fixture(scope="module")
+def eng(base):
+    return _engine(base, paged=True)
+
+
+@pytest.fixture(scope="module")
+def ref(eng):
+    """Healthy batched generation — ground truth every fault path must
+    still reproduce (greedy decode is deterministic)."""
+    return eng.generate(pad_prompts(PROMPTS), 6)
+
+
+def _reqs(max_new=6, **kw):
+    return [Request(rid=i, prompt=list(PROMPTS[i]), max_new=max_new, **kw)
+            for i in range(len(PROMPTS))]
+
+
+class TestExceptions:
+    def test_hierarchy(self):
+        for exc in (MemberDownError, CloudUnavailableError,
+                    PoolExhaustedError):
+            assert issubclass(exc, ServingFault)
+            assert issubclass(exc, RuntimeError)   # pre-existing handlers
+        e = MemberDownError("down", member=3)
+        assert e.member == 3 and e.delay_s == 0.0
+
+
+class TestFaultPlan:
+    def test_tick_gating_and_count(self):
+        plan = FaultPlan([FaultEvent("cloud", "error", tick=2, count=2)])
+        assert plan.consume("cloud") is None          # tick 0: not yet
+        plan.tick(); plan.tick()
+        assert plan.consume("cloud") is not None      # fires
+        assert plan.consume("cloud") is not None      # count=2: fires again
+        assert plan.consume("cloud") is None          # exhausted
+        assert plan.counters == {"cloud:error": 2}
+
+    def test_call_raises_typed(self):
+        plan = FaultPlan([FaultEvent("cloud", "timeout", count=1),
+                          FaultEvent("member:1", "crash", count=1)])
+        with pytest.raises(CloudUnavailableError):
+            plan.call("cloud", lambda: 42)
+        with pytest.raises(MemberDownError) as ei:
+            plan.call("member:1", lambda: 42)
+        assert ei.value.member == 1
+        # exhausted events: calls pass through, with zero delay
+        assert plan.call("cloud", lambda: 42) == (42, 0.0)
+
+    def test_straggle_reports_delay(self):
+        plan = FaultPlan([FaultEvent("member:0", "straggle", count=1,
+                                     delay_s=2.5)])
+        out, delay = plan.call("member:0", lambda: "x")
+        assert out == "x" and delay == 2.5
+
+    def test_reset_restores_spec(self):
+        plan = FaultPlan([FaultEvent("pool", "famine", count=1)], seed=7)
+        draw = plan.rng.rand()
+        assert plan.consume("pool") is not None
+        assert plan.consume("pool") is None
+        plan.tick()
+        plan.reset()
+        assert plan.now == 0
+        assert plan.rng.rand() == draw                # rng re-seeded
+        assert plan.consume("pool") is not None       # counts restored
+
+    def test_random_is_seed_deterministic(self):
+        a = FaultPlan.random(seed=3, n_members=4, ticks=20)
+        b = FaultPlan.random(seed=3, n_members=4, ticks=20)
+        sa = [(e.site, e.kind, e.tick, e.count, e.delay_s) for e in a.events]
+        sb = [(e.site, e.kind, e.tick, e.count, e.delay_s) for e in b.events]
+        assert sa == sb
+        c = FaultPlan.random(seed=4, n_members=4, ticks=20)
+        sc = [(e.site, e.kind, e.tick, e.count, e.delay_s) for e in c.events]
+        assert sa != sc
+
+
+class TestRetryPolicy:
+    def test_backoff_grows_exponentially(self):
+        p = RetryPolicy(backoff_base_s=0.5, backoff_mult=2.0, jitter=0.0)
+        assert p.backoff(0) == 0.5
+        assert p.backoff(1) == 1.0
+        assert p.backoff(2) == 2.0
+
+    def test_jitter_bounded_and_seeded(self):
+        p = RetryPolicy(backoff_base_s=1.0, backoff_mult=2.0, jitter=0.25)
+        rng = np.random.RandomState(0)
+        draws = [p.backoff(0, rng) for _ in range(50)]
+        assert all(0.75 <= d <= 1.25 for d in draws)
+        assert len(set(draws)) > 1
+        rng2 = np.random.RandomState(0)
+        assert [p.backoff(0, rng2) for _ in range(50)] == draws
+
+
+class TestCircuitBreaker:
+    def test_state_cycle(self):
+        br = CircuitBreaker(fail_threshold=1, cooldown_ticks=2)
+        assert br.allow(1)
+        br.record_failure(1)                 # trips: closed -> open
+        assert br.opened_count == 1
+        assert not br.allow(2)               # cooling down
+        assert br.allow(3)                   # half-open probe
+        br.record_failure(3)                 # probe failed -> re-open
+        assert br.opened_count == 2
+        assert not br.allow(4)
+        assert br.allow(5)
+        br.record_success()                  # probe succeeded -> closed
+        assert br.allow(6)
+
+    def test_threshold_needs_consecutive_failures(self):
+        br = CircuitBreaker(fail_threshold=2, cooldown_ticks=2)
+        br.record_failure(1)
+        assert br.allow(2)                   # one failure: still closed
+        br.record_success()
+        br.record_failure(3)
+        assert br.allow(4)                   # success reset the streak
+        br.record_failure(4)
+        assert not br.allow(5)
+
+
+class TestHealthRegistry:
+    def test_failure_threshold_and_probe(self):
+        h = HealthRegistry(3, fail_threshold=2, probe_interval=3)
+        assert h.available().all()
+        h.record_failure(1)
+        assert h.available().all()           # below threshold
+        h.record_failure(1)
+        assert h.available().tolist() == [True, False, True]
+        # half-open probe: member 1 re-offered every probe_interval ticks
+        probed = []
+        for _ in range(6):
+            h.tick()
+            probed.append(bool(h.available()[1]))
+        assert probed == [False, False, True, False, False, True]
+        h.record_success(1)
+        assert h.available().all()
+
+    def test_ewma_latency(self):
+        h = HealthRegistry(2, alpha=0.5)
+        assert np.isnan(h.ewma).all()
+        h.record_success(0, 1.0)
+        h.record_success(0, 2.0)
+        assert h.ewma[0] == pytest.approx(1.5)
+        assert np.isnan(h.ewma[1])
+
+    def test_select_peers_uses_health(self):
+        pred = np.array([0.5, 0.2, 0.9, 0.3])
+        h = HealthRegistry(4, fail_threshold=1)
+        h.record_failure(1)                  # fastest peer is down
+        mask = select_peers(pred, k=2, l_max=1.0, health=h)
+        assert mask.tolist() == [True, False, False, True]
+        # an observed slow EWMA displaces a good static prediction
+        h2 = HealthRegistry(4)
+        h2.record_success(1, 5.0)
+        mask2 = select_peers(pred, k=2, l_max=1.0, health=h2)
+        assert mask2.tolist() == [True, False, False, True]
+
+
+class TestServeFaults:
+    def test_famine_backpressure_still_answers(self, base, ref):
+        e = _engine(base)
+        plan = FaultPlan([FaultEvent("pool", "famine", count=3)])
+        fin = e.serve(_reqs(), n_slots=2, decode_chunk=4, faults=plan)
+        assert len(fin) == 3
+        for r in fin:
+            np.testing.assert_array_equal(r["tokens"], ref["tokens"][r["rid"]])
+        assert e.counters["famine_deferred"] > 0
+        assert plan.counters["pool:famine"] == 3
+
+    def test_empty_plan_is_bitwise_noop(self, base):
+        e = _engine(base)
+        fin0 = e.serve(_reqs(), n_slots=2, decode_chunk=4, faults=None)
+        c0 = dict(e.counters)
+        fin1 = e.serve(_reqs(), n_slots=2, decode_chunk=4,
+                       faults=FaultPlan([]))
+        for a, b in zip(sorted(fin0, key=lambda r: r["rid"]),
+                        sorted(fin1, key=lambda r: r["rid"])):
+            np.testing.assert_array_equal(a["tokens"], b["tokens"])
+            assert a["u"] == b["u"]
+        for k in ("famine_deferred", "shed", "expired", "requeued",
+                  "reprefill_cold"):
+            assert e.counters[k] == c0[k]    # no fault counter moved
+
+    def test_slot_failure_requeues(self, base, ref):
+        e = _engine(base)
+        plan = FaultPlan([FaultEvent("slot", "fail", count=1)])
+        fin = e.serve(_reqs(), n_slots=2, decode_chunk=4, faults=plan)
+        assert len(fin) == 3 and not any(r.get("shed") for r in fin)
+        for r in fin:
+            np.testing.assert_array_equal(r["tokens"], ref["tokens"][r["rid"]])
+        assert e.counters["requeued"] == 1
+
+    def test_forced_eviction_cold_reprefill(self, base):
+        e = _engine(base)
+        st = e.absorb(pad_prompts(PROMPTS[:1]))
+        full = list(PROMPTS[0]) + [11, 12, 2]
+        plan = FaultPlan([FaultEvent("session", "evict", count=1)])
+        fin = e.serve([Request(rid=0, prompt=[11, 12, 2], state=st,
+                               cold_prompt=full, max_new=6)],
+                      n_slots=1, decode_chunk=6, faults=plan)
+        cold = e.generate(pad_prompts([full]), 6)
+        np.testing.assert_array_equal(fin[0]["tokens"], cold["tokens"][0])
+        assert e.counters["reprefill_cold"] == 1
+
+    def test_real_famine_typed_raise_and_shed(self, base):
+        e = _engine(base, pool_blocks=4)     # absorb alone needs 8
+        with pytest.raises(PoolExhaustedError):
+            e.serve(_reqs()[:1], n_slots=1)
+        fin = e.serve(_reqs()[:1], n_slots=1, overload="shed")
+        assert fin[0]["shed"] and e.counters["shed"] == 1
+
+    def test_deadline_expiry_under_straggler(self, base):
+        # an injected decode straggle stalls the simulated clock past
+        # rid 0's deadline while it waits in the queue -> expired+shed;
+        # the unconstrained request rides out the stall and finishes
+        e = _engine(base)
+        plan = FaultPlan([FaultEvent("decode", "straggle", count=1,
+                                     delay_s=10.0)])
+        reqs = [Request(rid=0, prompt=list(PROMPTS[0]), max_new=20,
+                        deadline_ms=5000.0),
+                Request(rid=1, prompt=list(PROMPTS[1]), max_new=20)]
+        fin = e.serve(reqs, n_slots=2, decode_chunk=4, faults=plan,
+                      step_time_ms=10.0)
+        shed = {r["rid"]: bool(r.get("shed")) for r in fin}
+        assert shed == {0: True, 1: False}
+        assert e.counters["expired"] == 1
+
+    def test_priority_preemption_under_straggler(self, base):
+        # one slot, straggler-stalled; among the queued requests the
+        # urgent (lower priority value) one must be admitted first
+        e = _engine(base)
+        plan = FaultPlan([FaultEvent("decode", "straggle", count=1,
+                                     delay_s=1.0)])
+        reqs = [Request(rid=0, prompt=list(PROMPTS[0]), max_new=4),
+                Request(rid=1, prompt=list(PROMPTS[1]), max_new=4,
+                        priority=5),
+                Request(rid=2, prompt=list(PROMPTS[2]), max_new=4,
+                        priority=0)]
+        fin = e.serve(reqs, n_slots=1, decode_chunk=4, faults=plan,
+                      step_time_ms=1.0)
+        order = [r["rid"] for r in fin]
+        assert order.index(2) < order.index(1)
+        assert len(fin) == 3 and not any(r.get("shed") for r in fin)
+
+
+class TestFamineTTLEvictRetry:
+    def test_ttl_sweep_spares_queued_warm_handles(self, base):
+        # pool sized so two absorbed sessions wedge admission: without a
+        # TTL the serve raises; with one, the idle session is evicted,
+        # the retry admits, and the QUEUED warm request's handle survives
+        # the sweep (it is served warm: prefill_continue, not cold)
+        full_b = list(PROMPTS[1]) + [11, 2]
+
+        def scenario(**kw):
+            e = _engine(base, pool_blocks=9)
+            e.absorb(pad_prompts(PROMPTS[:1]))          # idle -> evictable
+            st_b = e.absorb(pad_prompts(PROMPTS[1:2]))  # queued warm ref
+            reqs = [Request(rid=0, prompt=[11, 2], state=st_b,
+                            cold_prompt=full_b, max_new=5),
+                    Request(rid=1, prompt=list(PROMPTS[0]), max_new=5)]
+            return e, e.serve(reqs, n_slots=2, decode_chunk=5, **kw)
+
+        with pytest.raises(PoolExhaustedError):
+            scenario()
+        e, fin = scenario(session_ttl_s=0.0)
+        warm_ref = e.generate(pad_prompts([full_b]), 5)
+        cold_ref = e.generate(pad_prompts(PROMPTS[:1]), 5)
+        for r in fin:
+            exp = warm_ref if r["rid"] == 0 else cold_ref
+            np.testing.assert_array_equal(r["tokens"], exp["tokens"][0])
+        assert e.counters["reprefill_cold"] == 0   # handle NOT swept
+        assert e.counters["prefill_continue"] >= 1
+
+
+class TestSwarmCasualties:
+    @pytest.fixture(scope="class")
+    def mono(self, base):
+        return _engine(base, paged=False)
+
+    def test_crash_salvage(self, mono):
+        prompts = pad_prompts(PROMPTS[:1])
+        basep = SwarmExecutor([mono] * 3, stop_token=2).collaborate(prompts, 4)
+        sw = SwarmExecutor([mono] * 3, stop_token=2,
+                           faults=FaultPlan([FaultEvent("member:1", "crash",
+                                                        count=1)]))
+        res = sw.collaborate(prompts, 4)
+        assert res["casualties"] == [1]
+        assert (res["u"][:, 1] == 1.0).all()       # w_min sentinel row
+        assert (res["answers"][:, 1] < 0).all()    # PAD
+        # consensus renormalizes over the two survivors -> same winner
+        np.testing.assert_array_equal(res["winner_tokens"],
+                                      basep["winner_tokens"])
+
+    def test_straggle_reported_not_dropped(self, mono):
+        prompts = pad_prompts(PROMPTS[:1])
+        basep = SwarmExecutor([mono] * 3, stop_token=2).collaborate(prompts, 4)
+        sw = SwarmExecutor([mono] * 3, stop_token=2,
+                           faults=FaultPlan([FaultEvent("member:2",
+                                                        "straggle", count=1,
+                                                        delay_s=3.0)]))
+        res = sw.collaborate(prompts, 4)
+        assert res["straggle_s"] == {2: 3.0}
+        np.testing.assert_array_equal(res["answers"], basep["answers"])
+
+    def test_empty_plan_parity(self, mono):
+        prompts = pad_prompts(PROMPTS)
+        a = SwarmExecutor([mono] * 3, stop_token=2).collaborate(prompts, 4)
+        b = SwarmExecutor([mono] * 3, stop_token=2,
+                          faults=FaultPlan([])).collaborate(prompts, 4)
+        np.testing.assert_array_equal(a["answers"], b["answers"])
+        np.testing.assert_array_equal(a["u"], b["u"])
+        np.testing.assert_array_equal(a["winner_tokens"], b["winner_tokens"])
+        assert b["casualties"] == [] and b["straggle_s"] == {}
+
+
+class TestSessionDurability:
+    @pytest.mark.parametrize("src_paged,dst_paged",
+                             [(True, True), (True, False),
+                              (False, True), (False, False)])
+    def test_kill_rebuild_resume_bitwise(self, base, src_paged, dst_paged):
+        turn2 = np.array([[9, 4, 2]], np.int32)
+        e1 = _engine(base, paged=src_paged)
+        st = e1.generate(pad_prompts(PROMPTS[:1]), 4,
+                         return_state=True)["state"]
+        with tempfile.TemporaryDirectory() as d:
+            e1.checkpoint_session(st, d)
+            ref = e1.generate(turn2, 4, state=st)    # uninterrupted chat
+            e2 = _engine(base, paged=dst_paged)      # the "restarted" engine
+            st2 = e2.restore_session(d)
+            got = e2.generate(turn2, 4, state=st2)
+        np.testing.assert_array_equal(got["tokens"], ref["tokens"])
+
+    def test_restore_missing_and_wrong_kind(self, base):
+        e = _engine(base, paged=False)
+        with tempfile.TemporaryDirectory() as d:
+            with pytest.raises(FileNotFoundError):
+                e.restore_session(d)

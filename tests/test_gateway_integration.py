@@ -187,3 +187,205 @@ def test_peer_selection_deadline():
     pred = np.array([0.1, 5.0, 0.2, 0.3])
     mask = select_peers(pred, k=2, l_max=1.0)
     assert mask.tolist() == [True, False, True, False]
+
+
+# ---------------------------------------------------------------------------
+# Execution-level fault injection (serving/faults.py): chaos batches through
+# the REAL gateway — retrying summon, circuit breaker, quorum salvage,
+# deterministic re-runs, and healthy-path bitwise parity.
+# ---------------------------------------------------------------------------
+
+def _chaos(gw, plan):
+    """Install a fault plan on gateway + swarm and rewind all fault state."""
+    gw.faults = plan
+    gw.swarm.faults = plan
+    gw.reset_fault_state()
+    return gw
+
+
+def _clear_chaos(gw):
+    gw.faults = None
+    gw.swarm.faults = None
+    gw.reset_fault_state()
+
+
+def test_cloud_summon_retries_then_circuit_opens(system):
+    """A dead cloud: the summon burns its full retry budget once, trips the
+    breaker, and the batch degrades (no CLOUD decisions, every query still
+    answered via O5).  The next batch skips the summon entirely (breaker
+    open), the one after probes half-open and re-trips."""
+    import dataclasses as dc
+
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    gw, _, _, world = system
+    gw = _fresh_sim(gw, wan_outage_p=0.0)
+    old_cfg = gw.router_cfg
+    # route every non-safety query's phase A straight to CLOUD
+    gw.router_cfg = dc.replace(old_cfg, tau_low=-2.0, tau_high=-1.0)
+    try:
+        _chaos(gw, FaultPlan([FaultEvent("cloud", "timeout", count=999)]))
+        qs = world.study_workload(4, 4, 0)
+
+        log1 = gw.answer_batch(qs)
+        fc = log1.faults
+        assert fc["cloud_attempts"] == gw.retry.max_attempts
+        assert fc["cloud_retries"] == gw.retry.max_attempts - 1
+        assert fc["cloud_exhausted"] == 1 and fc["breaker_opened"] == 1
+        assert not np.isin(log1.decision, (CLOUD, CLOUD_SAFETY)).any()
+        assert (fc["degraded_to_swarm"] + fc["degraded_to_local"]
+                + fc["degraded_refused"]) >= 1
+        assert log1.answered is not None
+        # failed attempts carry realized latency: timeout * retries + backoff
+        assert log1.latency.max() >= gw.retry.timeout_s \
+            * (gw.retry.max_attempts - 1)
+
+        log2 = gw.answer_batch(qs)          # breaker open: no summon at all
+        assert log2.faults["cloud_attempts"] == 0
+        assert log2.faults["breaker_open_skips"] == 1
+        assert not np.isin(log2.decision, (CLOUD, CLOUD_SAFETY)).any()
+
+        log3 = gw.answer_batch(qs)          # half-open probe, fails again
+        assert log3.faults["cloud_attempts"] == gw.retry.max_attempts
+        assert log3.faults["breaker_opened"] == 1
+    finally:
+        gw.router_cfg = old_cfg
+        _clear_chaos(gw)
+
+
+def test_flaky_cloud_retry_succeeds_within_budget(system):
+    """One injected timeout < max_attempts: the retry salvages the summon —
+    cloud answers arrive, the breaker stays closed, and the extra attempt's
+    deadline + backoff shows up in the cloud queries' latency and cost."""
+    import dataclasses as dc
+
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    gw, _, _, world = system
+    gw = _fresh_sim(gw, wan_outage_p=0.0)
+    old_cfg = gw.router_cfg
+    gw.router_cfg = dc.replace(old_cfg, tau_low=-2.0, tau_high=-1.0)
+    try:
+        qs = world.study_workload(4, 4, 0)
+        _clear_chaos(gw)
+        base = gw.answer_batch(qs)
+        _chaos(gw, FaultPlan([FaultEvent("cloud", "timeout", count=1)]))
+        log = gw.answer_batch(qs)
+        fc = log.faults
+        assert fc["cloud_attempts"] == 2 and fc["cloud_retries"] == 1
+        assert fc["cloud_exhausted"] == 0 and fc["breaker_opened"] == 0
+        cloud_mask = np.isin(log.decision, (CLOUD, CLOUD_SAFETY))
+        assert cloud_mask.any()
+        np.testing.assert_array_equal(log.answers, base.answers)
+        assert (log.latency[cloud_mask]
+                >= base.latency[cloud_mask] + gw.retry.timeout_s).all()
+        assert (log.cost[cloud_mask] > base.cost[cloud_mask]).all()
+    finally:
+        gw.router_cfg = old_cfg
+        _clear_chaos(gw)
+
+
+def test_member_crash_salvaged_by_survivors(system):
+    """A member crashing mid-round is a casualty, not a failed batch: the
+    consensus renormalizes over survivors, every query is answered, and
+    repeated casualties mark the member unavailable in the health registry."""
+    import dataclasses as dc
+
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    gw, _, _, world = system
+    gw = _fresh_sim(gw, wan_outage_p=0.0)
+    old_cfg = gw.router_cfg
+    # force the Level-1 swarm round for every non-safety query
+    gw.router_cfg = dc.replace(old_cfg, tau_low=-1.0, tau_high=2.0)
+    try:
+        _chaos(gw, FaultPlan([FaultEvent("member:1", "crash", count=999)]))
+        qs = world.study_workload(4, 4, 0)
+        log1 = gw.answer_batch(qs)
+        assert (log1.decision == SWARM).any()
+        assert log1.faults["member_casualties"] >= 1
+        assert log1.availability() == 1.0   # salvage: everything answered
+        gw.answer_batch(qs)                 # second consecutive casualty...
+        assert not gw.health.available()[1]  # ...downs it (fail_threshold=2)
+    finally:
+        gw.router_cfg = old_cfg
+        _clear_chaos(gw)
+
+
+def test_chaos_workload_answers_all_and_is_deterministic(system):
+    """Acceptance: a seeded plan combining a member crash, a flaky cloud
+    (retried within budget), a straggler, and pool famine still answers
+    every query — and two runs bracketed by reset_fault_state() agree
+    bitwise on answers, decisions, latency, cost, and fault counters."""
+    import dataclasses as dc
+
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    gw, _, _, world = system
+    gw = _fresh_sim(gw, wan_outage_p=0.0)
+    old_cfg = gw.router_cfg
+    # force a swarm round every batch so the tick-pinned member events
+    # actually meet a round (safety queries still summon the cloud)
+    gw.router_cfg = dc.replace(old_cfg, tau_low=-1.0, tau_high=2.0)
+    qs = world.study_workload(6, 6, 4)
+
+    def plan():
+        return FaultPlan([
+            FaultEvent("member:0", "crash", tick=1, count=1),
+            FaultEvent("member:2", "straggle", tick=2, count=1, delay_s=2.0),
+            FaultEvent("cloud", "timeout", tick=1, count=1),
+            FaultEvent("pool", "famine", tick=2, count=1),
+        ], seed=11)
+
+    def run():
+        gw.reset_fault_state()
+        return [gw.answer_batch(qs) for _ in range(3)]
+
+    _chaos(gw, plan())
+    try:
+        runs_a = run()
+        runs_b = run()
+        for log_a, log_b in zip(runs_a, runs_b):
+            assert log_a.availability() == 1.0
+            np.testing.assert_array_equal(log_a.answers, log_b.answers)
+            np.testing.assert_array_equal(log_a.decision, log_b.decision)
+            np.testing.assert_array_equal(log_a.latency, log_b.latency)
+            np.testing.assert_array_equal(log_a.cost, log_b.cost)
+            assert log_a.faults == log_b.faults
+        total = {}
+        for log in runs_a:
+            for k, v in log.faults.items():
+                total[k] = total.get(k, 0) + v
+        assert total["member_casualties"] >= 1
+        assert total["cloud_retries"] >= 1 and total["cloud_exhausted"] == 0
+    finally:
+        gw.router_cfg = old_cfg
+        _clear_chaos(gw)
+
+
+def test_empty_faultplan_is_bitwise_noop(system):
+    """Healthy-path parity: an installed-but-empty FaultPlan must leave
+    answers, routing, latency and cost bitwise identical to faults=None."""
+    from repro.serving.faults import FaultPlan
+
+    gw, _, _, world = system
+    gw = _fresh_sim(gw)
+    qs = world.study_workload(4, 4, 2)
+    try:
+        _clear_chaos(gw)
+        log0 = gw.answer_batch(qs)
+        _chaos(gw, FaultPlan([]))
+        log1 = gw.answer_batch(qs)
+        np.testing.assert_array_equal(log0.answers, log1.answers)
+        np.testing.assert_array_equal(log0.decision, log1.decision)
+        np.testing.assert_array_equal(log0.latency, log1.latency)
+        np.testing.assert_array_equal(log0.cost, log1.cost)
+        assert log1.availability() == log0.availability() == 1.0
+        # identical counters too (cloud_attempts counts the healthy summon)
+        assert log1.faults == log0.faults
+        assert all(log1.faults[k] == 0 for k in
+                   ("cloud_retries", "cloud_failures", "cloud_exhausted",
+                    "breaker_opened", "member_casualties", "famine_deferred",
+                    "shed", "requeued", "reprefill_cold", "expired"))
+    finally:
+        _clear_chaos(gw)

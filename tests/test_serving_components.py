@@ -88,6 +88,42 @@ class TestSimulator:
                                 LatencyParams(), 3)
         assert sim.peer_comm(50, 3).mean() > 3 * base.peer_comm(50, 3).mean()
 
+    def test_mttr_is_geometric_mean_sojourn(self):
+        """Recovery is per-tick Bernoulli, so downtime is geometric with
+        mean 1/recover_p ticks — the empirical MTTR of a seeded run must
+        match SimConfig.mean_ticks_to_recover."""
+        cfg = SimConfig(seed=3, node_fail_p=0.0, node_recover_p=0.25,
+                        wan_outage_p=0.0)
+        assert cfg.mean_ticks_to_recover("node") == 4.0
+        assert cfg.mean_ticks_to_recover("wan") == 2.0
+        assert SimConfig(node_recover_p=0.0).mean_ticks_to_recover("node") \
+            == float("inf")
+        sim = NetworkSimulator(cfg, LatencyParams(), 1)
+        durations = []
+        for _ in range(400):
+            sim.member_up[0] = False         # force an outage, time recovery
+            ticks = 0
+            while not sim.member_up[0]:
+                sim.tick()
+                ticks += 1
+            durations.append(ticks)
+        assert np.mean(durations) == pytest.approx(4.0, abs=0.5)
+
+    def test_reset_rewinds_seeded_state(self):
+        sim = NetworkSimulator(SimConfig(seed=5, node_fail_p=0.3),
+                               LatencyParams(), 4)
+        for _ in range(6):
+            sim.tick()
+        trace_a = (sim.wan_up, sim.member_up.copy(), sim.wan_rtt(3).copy())
+        sim.reset()
+        assert sim.wan_up and sim.member_up.all()
+        for _ in range(6):
+            sim.tick()
+        trace_b = (sim.wan_up, sim.member_up.copy(), sim.wan_rtt(3).copy())
+        assert trace_a[0] == trace_b[0]
+        np.testing.assert_array_equal(trace_a[1], trace_b[1])
+        np.testing.assert_array_equal(trace_a[2], trace_b[2])
+
 
 class TestWorkload:
     def test_study_composition(self):
