@@ -12,14 +12,14 @@ keyword oracle.
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
-from repro.models.common import ModelConfig, ParamDef, abstract_tree, axes_tree, init_tree, normal_init, zeros_init
+from repro.models.common import (ModelConfig, ParamDef, init_tree,
+                                 normal_init, zeros_init)
 
 Array = jax.Array
 

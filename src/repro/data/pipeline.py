@@ -11,7 +11,6 @@ multi-process JAX each host materialises only its addressable shard via
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import numpy as np

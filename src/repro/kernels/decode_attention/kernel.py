@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocking
+
 NEG_INF = -1e30
 
 
@@ -231,7 +233,7 @@ def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     """q (B,K,G,D); k,v (B,T,K,D); pos (B,T); index (B,). -> (B,K,G,D)."""
     B, K, G, D = q.shape
     T = k.shape[1]
-    bt = min(bt, T)
+    bt = blocking.decode_blocks(T, bt)
     assert T % bt == 0
     grid = (B, K, T // bt)
     kern = functools.partial(_decode_kernel, bt=bt, nt=T // bt,

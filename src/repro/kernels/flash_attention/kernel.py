@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocking
+
 NEG_INF = -1e30
 
 
@@ -136,8 +138,7 @@ def flash_attention_positions_pallas(q: jax.Array, k: jax.Array,
     B, S, H, D = q.shape
     T, K = k.shape[1], k.shape[2]
     G = H // K
-    bq = min(bq, S)
-    bk = min(bk, T)
+    bq, bk = blocking.flash_blocks(S, T, bq, bk)
     assert S % bq == 0 and T % bk == 0
     grid = (B, H, S // bq, T // bk)
     kern = functools.partial(
@@ -173,8 +174,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     B, S, H, D = q.shape
     T, K = k.shape[1], k.shape[2]
     G = H // K
-    bq = min(bq, S)
-    bk = min(bk, T)
+    bq, bk = blocking.flash_blocks(S, T, bq, bk)
     assert S % bq == 0 and T % bk == 0
     grid = (B, H, S // bq, T // bk)
     kern = functools.partial(

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import blocking
+
 NEG_INF = -1e30
 
 
@@ -96,8 +98,7 @@ def uncertainty_pallas(logits: jax.Array, tokens: jax.Array, *, k: int = 10,
                        interpret: bool = True):
     """logits (B,N,V), tokens (B,N) -> (h_token, v_topk, h_dist), each (B,N)."""
     B, N, V = logits.shape
-    bn = min(bn, N)
-    bv = min(bv, V)
+    bn, bv = blocking.uncertainty_blocks(N, V, bn, bv)
     assert N % bn == 0 and V % bv == 0, (N, bn, V, bv)
     grid = (B, N // bn, V // bv)
     kern = functools.partial(_uncertainty_kernel, k=k, bv=bv, nv=V // bv)

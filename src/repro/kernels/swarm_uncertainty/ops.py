@@ -5,7 +5,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.swarm_uncertainty import kernel as K
 from repro.kernels.swarm_uncertainty import ref as R

@@ -31,7 +31,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs as C
 from repro.distributed import sharding as sh

@@ -18,7 +18,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro import configs as C
 from repro.data.pipeline import SyntheticLMPipeline, device_put_batch

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, apply_rope,
+from repro.models.common import (ModelConfig, ParamDef, apply_rope,
                                  norm_def, normal_init, rmsnorm, rope_angles,
                                  zeros_init)
 
@@ -347,9 +347,12 @@ def _decode_stream_chunk(carry, qr: Array, k_c: Array, v_c: Array,
 def _decode_stream_init(B: int, cfg: ModelConfig):
     K, Dh = cfg.num_kv_heads, cfg.head_dim
     G = cfg.num_heads // K
+    # swarmlint: ignore[dtype-drift] flash-style (m, l, acc) softmax
+    # accumulators live one decode step, not in the cache; bf16 running
+    # max/sum loses low bits vs the reference softmax
     return (jnp.full((B, K, G), NEG_INF, jnp.float32),
-            jnp.zeros((B, K, G), jnp.float32),
-            jnp.zeros((B, K, G, Dh), jnp.float32))
+            jnp.zeros((B, K, G), jnp.float32),  # swarmlint: ignore[dtype-drift] see above: one-step softmax accumulator
+            jnp.zeros((B, K, G, Dh), jnp.float32))  # swarmlint: ignore[dtype-drift] see above: one-step softmax accumulator
 
 
 def _decode_stream_finish(carry, B: int, cfg: ModelConfig, mesh, rules) -> Array:

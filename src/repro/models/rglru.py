@@ -136,6 +136,9 @@ def rglru_prefill(p: dict, x: Array, state: RGLRUState, positions: Array,
 def init_rglru_state(cfg: ModelConfig, batch: int) -> RGLRUState:
     W = cfg.rnn_width or cfg.d_model
     return RGLRUState(
+        # swarmlint: ignore[dtype-drift] the RG-LRU recurrence h' = a*h + b*x
+        # compounds per token; bf16 state drifts over long sequences and
+        # breaks paged-vs-monolithic bitwise parity
         h=jnp.zeros((batch, W), jnp.float32),
         conv=jnp.zeros((batch, cfg.rnn_conv_width - 1, W), cfg.dtype),
     )

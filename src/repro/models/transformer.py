@@ -9,8 +9,6 @@ compact HLO for the multi-pod dry-run.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

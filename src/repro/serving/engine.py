@@ -1274,9 +1274,12 @@ class InferenceEngine:
         nxt = None
         for t in range(S):
             tok = jnp.asarray(prompts[:, t:t + 1])
+            # absorption always runs greedy, so _step's sampling branch is
+            # never traced and needs no key; threading the live `rng`
+            # through S calls would alias the decode stream's key
             nxt, last_logits, cache = _step(
                 self.params, self.cfg, tok, cache,
-                jnp.full((B,), t, jnp.int32), rng, True,
+                jnp.full((B,), t, jnp.int32), None, True,
                 mesh=self.mesh, rules=self.rules)
 
         out_tokens = []

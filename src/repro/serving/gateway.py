@@ -14,7 +14,6 @@ as the local answer, so Level-0 queries cost exactly one SLM pass.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax.numpy as jnp
 import numpy as np

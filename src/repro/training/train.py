@@ -16,9 +16,6 @@ data replay; elastic re-mesh is restore-time (checkpoint.py).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from repro import configs as C
 from repro.core.uncertainty import UncertaintyConfig
 from repro.models import transformer as T
 from repro.serving.engine import InferenceEngine
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import Request
 from repro.serving.swarm import SwarmExecutor, pad_prompts, truncate_at_stop
 
 ARCHS = {

@@ -9,8 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.cost_model import LatencyParams
-from repro.core.router import (CLOUD, CLOUD_SAFETY, LOCAL, REFUSE, SWARM,
-                               RouterConfig)
+from repro.core.router import CLOUD, CLOUD_SAFETY, LOCAL, REFUSE, SWARM
 from repro.data.workload import FactWorld
 from repro.serving.simulator import NetworkSimulator, SimConfig
 

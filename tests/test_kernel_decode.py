@@ -18,12 +18,10 @@ subprocess like the other sharded suites.  On top of parity:
 
 import dataclasses
 import os
-import re
 import subprocess
 import sys
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

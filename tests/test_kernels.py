@@ -280,3 +280,58 @@ class TestPagedDecodeKernel:
         np.testing.assert_allclose(np.asarray(ref, np.float32),
                                    np.asarray(mono, np.float32),
                                    rtol=1e-5, atol=1e-5)
+
+
+class TestBlockSnapping:
+    """Grid legality for geometries the old ``min(cap, dim)`` policy
+    rejected (ISSUE 9): legal serving shapes whose dimension is not a
+    multiple of the default block cap must snap to a dividing block and
+    still match the reference — previously these tripped the kernels'
+    divisibility asserts on TPU (e.g. a 640-slot cache vs bt=512,
+    llama3's 128256-entry vocab vs bv=2048)."""
+
+    def test_snap_block_properties(self):
+        from repro.kernels.blocking import snap_block
+        for dim in (64, 192, 320, 640, 1280, 49152, 128256, 152064, 202048):
+            for cap in (8, 256, 512, 2048):
+                b = snap_block(dim, cap)
+                assert 1 <= b <= min(cap, dim) and dim % b == 0, (dim, cap)
+        # the documented regressions: old policy was min(cap, dim)
+        assert 640 % min(512, 640) != 0
+        assert 128256 % min(2048, 128256) != 0
+
+    def test_decode_attention_non_multiple_cache_len(self):
+        # T=640 is a legal cache length (64-granule growth) with bt=512
+        B, T, K, G, D = 2, 640, 2, 2, 32
+        q = jax.random.normal(KEYS[0], (B, K, G, D), jnp.float32)
+        k = jax.random.normal(KEYS[1], (B, T, K, D), jnp.float32)
+        v = jax.random.normal(KEYS[2], (B, T, K, D), jnp.float32)
+        idx = jnp.full((B,), T - 1)
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+        out = decode_attention_pallas(q, k, v, pos, idx, interpret=True)
+        ref = decode_attention_ref(q, k, v, pos, idx)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_flash_attention_non_multiple_lengths(self):
+        # S=T=320 (a 64-granule length) vs the 256 default tiles
+        B, S, H, K, D = 1, 320, 4, 2, 32
+        q = jax.random.normal(KEYS[0], (B, S, H, D), jnp.float32)
+        k = jax.random.normal(KEYS[1], (B, S, K, D), jnp.float32)
+        v = jax.random.normal(KEYS[2], (B, S, K, D), jnp.float32)
+        out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_uncertainty_non_multiple_vocab(self):
+        # V=672 vs an explicit bv=256 cap: snaps to 224
+        B, N, V = 2, 8, 672
+        logits = jax.random.normal(KEYS[0], (B, N, V), jnp.float32) * 3
+        toks = jax.random.randint(KEYS[1], (B, N), 0, V)
+        h, v, hd = uncertainty_pallas(logits, toks, k=5, bv=256,
+                                      interpret=True)
+        hr, vr, hdr = uncertainty_ref(logits, toks, k=5)
+        np.testing.assert_allclose(h, hr, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(v, vr, rtol=5e-3, atol=5e-3)
+        np.testing.assert_allclose(hd, hdr, rtol=1e-4, atol=1e-4)

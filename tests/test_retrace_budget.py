@@ -1,0 +1,88 @@
+"""Retrace-budget regression (ISSUE 9 satellite).
+
+The engine buckets prompt shapes so repeated traffic re-uses compiled
+programs; PR 6's compilation-cache test proves this across *processes*
+via the cache file set.  This test proves it in-process: after one
+``generate()`` warmed a shape bucket, a second ``generate()`` on the
+same bucket (different content, different exact S inside the bucket)
+must perform ZERO fresh traces on any jit entry point in the engine
+module — counted directly off the jitted functions' trace caches.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs as C
+from repro.core.uncertainty import UncertaintyConfig
+from repro.models import transformer as T
+from repro.serving import engine as E
+from repro.serving.engine import InferenceEngine
+
+
+def _trace_counts():
+    """Trace-cache sizes of every module-level jit in serving.engine."""
+    counts = {}
+    for name, obj in vars(E).items():
+        size = getattr(obj, "_cache_size", None)
+        if callable(size):
+            counts[name] = size()
+    return counts
+
+
+def _engine(**kw):
+    cfg = dataclasses.replace(C.get_smoke("smollm-135m"), vocab_size=512)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return InferenceEngine("rt", cfg, params, UncertaintyConfig(), **kw)
+
+
+def _prompts(seed, s):
+    return np.random.RandomState(seed).randint(
+        7, 500, size=(2, s)).astype(np.int32)
+
+
+class TestRetraceBudget:
+    def test_second_generate_same_bucket_traces_nothing(self):
+        eng = _engine()
+        eng.generate(_prompts(0, 30), 4)
+        warm = _trace_counts()
+        # same bucket (30 and 31 both round to the 32 bucket), new content
+        eng.generate(_prompts(1, 31), 4)
+        eng.generate(_prompts(2, 30), 4)
+        after = _trace_counts()
+        grew = {k: (warm[k], after[k]) for k in warm if after[k] > warm[k]}
+        assert not grew, f"fresh traces on a warm bucket: {grew}"
+
+    def test_new_bucket_traces_then_stabilises(self):
+        eng = _engine()
+        eng.generate(_prompts(0, 30), 4)
+        warm = _trace_counts()
+        eng.generate(_prompts(1, 60), 4)        # 64 bucket: traces expected
+        mid = _trace_counts()
+        assert sum(mid.values()) > sum(warm.values())
+        eng.generate(_prompts(2, 57), 4)        # same 64 bucket: none
+        after = _trace_counts()
+        assert after == mid
+
+    def test_paged_engine_same_budget(self):
+        eng = _engine(paged=True, block_len=16)
+        eng.generate(_prompts(0, 30), 4)
+        warm = _trace_counts()
+        eng.generate(_prompts(1, 31), 4)
+        after = _trace_counts()
+        grew = {k: (warm[k], after[k]) for k in warm if after[k] > warm[k]}
+        assert not grew, f"fresh paged traces on a warm bucket: {grew}"
+
+    def test_stepwise_absorb_uses_no_key(self):
+        """The absorb loop passes rng=None (greedy): S absorb steps must
+        not consume or alias the decode stream's key — sampled stepwise
+        decode draws from exactly the post-absorb split sequence."""
+        eng = _engine()
+        p = _prompts(0, 12)
+        r1 = eng.generate_stepwise(p, 4, greedy=False, seed=3)
+        r2 = eng.generate_stepwise(p, 4, greedy=False, seed=3)
+        assert np.array_equal(r1["tokens"], r2["tokens"])
+        r3 = eng.generate_stepwise(p, 4, greedy=False, seed=4)
+        assert not np.array_equal(r1["tokens"], r3["tokens"]) or \
+            r1["tokens"].size == 0

@@ -4,7 +4,6 @@ workload, meshes, and the dry-run collective parser."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,33 @@
+"""swarmlint: repo-specific static analysis for the SWARM-LLM serving
+stack.
+
+Two layers (see docs/STATIC_ANALYSIS.md for the rule catalogue):
+
+* **AST rules** (stdlib ``ast``, no jax import): donation-reuse,
+  donation-dup, global-rng, key-reuse, tracer-leak, dtype-drift.
+* **Abstract-eval probes** (jax on the CPU backend, nothing executed
+  on an accelerator): shard-coverage, decode-dtype, donation-alias,
+  pallas-grid.
+
+Entry point: ``python -m tools.swarmlint [--strict] [--json]``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from .report import Finding, render_json, render_text
+
+
+def run_all(paths: Optional[List[str]] = None, *,
+            with_probes: bool = True,
+            only: Optional[set] = None) -> List[Finding]:
+    from .probes import run_probes
+    from .rules import run_ast_rules
+
+    findings = run_ast_rules(paths or ["src/repro"], only=only)
+    if with_probes:
+        findings.extend(run_probes(only=only))
+    return findings
+
+
+__all__ = ["Finding", "render_json", "render_text", "run_all"]

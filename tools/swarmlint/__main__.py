@@ -1,0 +1,78 @@
+"""CLI: ``python -m tools.swarmlint [paths...] [options]``.
+
+Exit status: 0 when no active (unsuppressed) findings; 1 otherwise.
+``--strict`` additionally fails on malformed pragmas and on suppressed
+findings whose rule id no longer exists (stale pragmas).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    # run from the repo root regardless of invocation cwd, and make the
+    # serving stack importable for the probes
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    os.chdir(repo)
+    src = os.path.join(repo, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from tools.swarmlint import run_all
+    from tools.swarmlint.probes import PROBE_IDS
+    from tools.swarmlint.report import render_json, render_text
+    from tools.swarmlint.rules import AST_RULE_IDS
+
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.swarmlint",
+        description="JAX/Pallas-aware static analysis for the SWARM-LLM "
+                    "serving stack")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/dirs to lint (default: src/repro)")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit non-zero on any active finding "
+                             "(including bad pragmas)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="machine-readable output")
+    parser.add_argument("--no-probes", action="store_true",
+                        help="AST rules only (fast, no jax import)")
+    parser.add_argument("--rule", action="append", default=None,
+                        help="restrict to the given rule id(s)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print known rule ids and exit")
+    parser.add_argument("--show-suppressed", action="store_true",
+                        help="include pragma-suppressed findings in text "
+                             "output")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(AST_RULE_IDS):
+            print(f"{rid}  (ast)")
+        for rid in PROBE_IDS:
+            print(f"{rid}  (probe)")
+        return 0
+
+    only = set(args.rule) if args.rule else None
+    findings = run_all(args.paths or None,
+                       with_probes=not args.no_probes, only=only)
+    active = [f for f in findings if not f.suppressed]
+
+    if args.as_json:
+        print(render_json(findings))
+    else:
+        text = render_text(findings, show_suppressed=args.show_suppressed)
+        if text:
+            print(text)
+        n_sup = len(findings) - len(active)
+        print(f"swarmlint: {len(active)} finding(s), "
+              f"{n_sup} suppressed by pragma")
+
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,315 @@
+"""Shared AST machinery for swarmlint rules.
+
+Provides source loading, a registry of jit-wrapped functions (with their
+``donate_argnames`` / ``static_argnames``), dotted-name helpers, and a
+small statement-order dataflow simulator that rules subclass to track
+"this variable died / was consumed at line N" facts.
+
+The simulator is deliberately an over-approximation tuned for zero
+false positives on idiomatic JAX code rather than completeness:
+
+* statements are processed in source order; loads in a statement are
+  seen before the statement's own calls take effect, and assignment
+  targets are processed last — so ``cur, cache = f(cache)`` (the
+  donate-and-rebind idiom) and ``rng, sub = jax.random.split(rng)``
+  (the consume-and-rebind idiom) never flag;
+* ``if``/``else`` branches merge optimistically (a variable is only
+  dead after the branch if it is dead on *both* paths);
+* loop bodies are simulated twice, which is what catches
+  cross-iteration reuse (a key consumed in iteration ``i`` and again in
+  ``i+1`` without a rebind).
+"""
+from __future__ import annotations
+
+import ast
+import copy
+import dataclasses
+import os
+from typing import Dict, Iterator, List, Optional, Set
+
+from .report import Finding
+
+
+# ---------------------------------------------------------------------------
+# source files
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str
+    text: str
+    tree: ast.Module
+
+    @classmethod
+    def load(cls, path: str) -> "SourceFile":
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        return cls(path=path, text=text, tree=ast.parse(text, filename=path))
+
+
+def iter_py_files(root: str) -> Iterator[str]:
+    if os.path.isfile(root):
+        yield root
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", ".git"))
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                yield os.path.join(dirpath, name)
+
+
+# ---------------------------------------------------------------------------
+# name helpers
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render ``a.b.c`` attribute/name chains; None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_const_set(node: Optional[ast.AST]) -> Set[str]:
+    """Extract {'a', 'b'} from 'a', ('a', 'b') or ['a', 'b'] literals."""
+    if node is None:
+        return set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = set()
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.add(elt.value)
+        return out
+    return set()
+
+
+def param_names(fn: ast.FunctionDef) -> List[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    names += [a.arg for a in args.kwonlyargs]
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def iter_functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
+    """All function defs in the module, including nested and methods."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# jit registry
+
+
+@dataclasses.dataclass
+class JitSpec:
+    name: str
+    params: List[str]
+    donate: Set[str]
+    static: Set[str]
+    node: Optional[ast.FunctionDef]
+    line: int
+
+
+def _jit_call_kwargs(call: ast.Call) -> Optional[dict]:
+    """If ``call`` is jax.jit(...) or partial(jax.jit, ...), return its
+    keyword nodes; None otherwise."""
+    fname = dotted(call.func)
+    if fname in ("jax.jit", "jit"):
+        return {kw.arg: kw.value for kw in call.keywords if kw.arg}
+    if fname in ("partial", "functools.partial") and call.args:
+        inner = dotted(call.args[0])
+        if inner in ("jax.jit", "jit"):
+            return {kw.arg: kw.value for kw in call.keywords if kw.arg}
+    return None
+
+
+def build_jit_registry(tree: ast.Module) -> Dict[str, JitSpec]:
+    """Map function name -> JitSpec for every jit-wrapped function in a
+    module: decorator style (``@jax.jit`` / ``@partial(jax.jit, ...)``)
+    and assignment style (``f = jax.jit(g, ...)``)."""
+    registry: Dict[str, JitSpec] = {}
+    defs = {fn.name: fn for fn in iter_functions(tree)}
+
+    for fn in iter_functions(tree):
+        for dec in fn.decorator_list:
+            kwargs = None
+            if isinstance(dec, ast.Call):
+                kwargs = _jit_call_kwargs(dec)
+            elif dotted(dec) in ("jax.jit", "jit"):
+                kwargs = {}
+            if kwargs is None:
+                continue
+            registry[fn.name] = JitSpec(
+                name=fn.name, params=param_names(fn),
+                donate=str_const_set(kwargs.get("donate_argnames")),
+                static=str_const_set(kwargs.get("static_argnames")),
+                node=fn, line=fn.lineno)
+            break
+
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            continue
+        call = node.value
+        if dotted(call.func) not in ("jax.jit", "jit") or not call.args:
+            continue
+        inner = dotted(call.args[0])
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+        inner_def = defs.get(inner) if inner else None
+        registry[node.targets[0].id] = JitSpec(
+            name=node.targets[0].id,
+            params=param_names(inner_def) if inner_def else [],
+            donate=str_const_set(kwargs.get("donate_argnames")),
+            static=str_const_set(kwargs.get("static_argnames")),
+            node=inner_def, line=node.lineno)
+    return registry
+
+
+# ---------------------------------------------------------------------------
+# statement-order dataflow simulator
+
+
+class StmtSimulator:
+    """Walk one function body in statement order with two-pass loops.
+
+    Subclasses override ``on_load`` / ``on_call`` / ``on_store`` and
+    mutate ``self.state`` (a dict name -> anything).  Findings are
+    deduplicated by (rule, line, message)."""
+
+    def __init__(self, path: str, fn: ast.FunctionDef):
+        self.path = path
+        self.fn = fn
+        self.state: Dict[str, object] = {}
+        self.findings: List[Finding] = []
+        self._seen: Set[tuple] = set()
+
+    # -- hooks ---------------------------------------------------------
+    def on_load(self, name: str, node: ast.AST) -> None: ...
+    def on_call(self, call: ast.Call) -> None: ...
+    def on_store(self, name: str, node: ast.AST) -> None: ...
+
+    def merge(self, a: Dict[str, object],
+              b: Dict[str, object]) -> Dict[str, object]:
+        """Optimistic branch merge: keep facts only where both agree."""
+        return {k: v for k, v in a.items() if b.get(k) == v}
+
+    # -- emission ------------------------------------------------------
+    def emit(self, rule: str, line: int, message: str, col: int = 0) -> None:
+        key = (rule, line, message)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(Finding(rule, self.path, line, message, col))
+
+    # -- traversal -----------------------------------------------------
+    def run(self) -> List[Finding]:
+        self.process_block(self.fn.body)
+        return self.findings
+
+    def _expr_parts(self, node: Optional[ast.AST]):
+        """Yield (kind, payload) events for an expression subtree in a
+        stable order: loads first, then calls (innermost first)."""
+        if node is None:
+            return [], []
+        loads, calls = [], []
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                continue
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                loads.append(sub)
+            elif isinstance(sub, ast.Call):
+                calls.append(sub)
+        return loads, calls
+
+    def _eval_expr(self, node: Optional[ast.AST]) -> None:
+        loads, calls = self._expr_parts(node)
+        for n in loads:
+            self.on_load(n.id, n)
+        for c in calls:
+            self.on_call(c)
+
+    def _store_targets(self, target: ast.AST) -> None:
+        for sub in ast.walk(target):
+            if isinstance(sub, ast.Name) and isinstance(
+                    sub.ctx, (ast.Store, ast.Del)):
+                self.on_store(sub.id, sub)
+
+    def process_block(self, stmts: List[ast.stmt]) -> None:
+        for stmt in stmts:
+            self.process_stmt(stmt)
+
+    def process_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # separate scope; analyzed on its own
+        if isinstance(stmt, ast.Assign):
+            self._eval_expr(stmt.value)
+            for t in stmt.targets:
+                self._store_targets(t)
+        elif isinstance(stmt, ast.AugAssign):
+            self._eval_expr(stmt.value)
+            self._eval_expr(stmt.target)
+            self._store_targets(stmt.target)
+        elif isinstance(stmt, ast.AnnAssign):
+            self._eval_expr(stmt.value)
+            if stmt.value is not None:
+                self._store_targets(stmt.target)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            self._eval_expr(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self._eval_expr(stmt.test)
+            before = copy.deepcopy(self.state)
+            self.process_block(stmt.body)
+            after_body = self.state
+            self.state = before
+            self.process_block(stmt.orelse)
+            self.state = self.merge(after_body, self.state)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._eval_expr(stmt.iter)
+            self._store_targets(stmt.target)
+            entry = copy.deepcopy(self.state)
+            for _ in range(2):  # two passes: catch cross-iteration reuse
+                self.process_block(stmt.body)
+                self._store_targets(stmt.target)
+            self.state = self.merge(entry, self.state)
+            self.process_block(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            entry = copy.deepcopy(self.state)
+            for _ in range(2):
+                self._eval_expr(stmt.test)
+                self.process_block(stmt.body)
+            self.state = self.merge(entry, self.state)
+            self.process_block(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._eval_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._store_targets(item.optional_vars)
+            self.process_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self.process_block(stmt.body)
+            for handler in stmt.handlers:
+                self.process_block(handler.body)
+            self.process_block(stmt.orelse)
+            self.process_block(stmt.finalbody)
+        elif isinstance(stmt, (ast.Raise, ast.Assert)):
+            self._eval_expr(getattr(stmt, "exc", None)
+                            or getattr(stmt, "test", None))
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self._store_targets(t)
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to do

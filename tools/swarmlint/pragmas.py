@@ -1,0 +1,91 @@
+"""``# swarmlint: ignore[rule-id] <justification>`` pragma handling.
+
+A pragma suppresses findings for the named rule(s) on its own line, or —
+when it is a standalone comment line — on the next non-comment line.
+The justification text after the bracket is MANDATORY: a pragma without
+one does not suppress anything and instead raises a ``bad-pragma``
+finding, so every suppression in the tree documents *why* the invariant
+is intentionally broken there.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from .report import Finding
+
+PRAGMA_RE = re.compile(
+    r"#\s*swarmlint:\s*ignore\[([a-zA-Z0-9_,\s-]*)\]\s*(.*)$")
+
+# rule-id for a malformed pragma; not itself suppressible.
+BAD_PRAGMA = "bad-pragma"
+
+
+class PragmaMap:
+    """Per-file map of line -> set of suppressed rule ids."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        # line (1-based) -> {rule ids suppressed on that line}
+        self.by_line: Dict[int, set] = {}
+        self.errors: List[Finding] = []
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        lines = text.splitlines()
+        for i, raw in enumerate(lines, start=1):
+            m = PRAGMA_RE.search(raw)
+            if m is None:
+                if "swarmlint" in raw and "#" in raw.split("swarmlint")[0]:
+                    self.errors.append(Finding(
+                        BAD_PRAGMA, self.path, i,
+                        "unparseable swarmlint pragma (expected "
+                        "'# swarmlint: ignore[rule-id] justification')"))
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            justification = m.group(2).strip()
+            if not rules:
+                self.errors.append(Finding(
+                    BAD_PRAGMA, self.path, i,
+                    "pragma names no rule ids: ignore[] is empty"))
+                continue
+            if not justification:
+                self.errors.append(Finding(
+                    BAD_PRAGMA, self.path, i,
+                    f"pragma ignore[{', '.join(sorted(rules))}] has no "
+                    "justification text; say why the invariant is "
+                    "intentionally broken here"))
+                continue
+            target = i
+            # a standalone comment line applies to the next line of code
+            # (skipping continuation comment lines and blanks)
+            if raw.strip().startswith("#"):
+                target = i + 1
+                while target <= len(lines) and (
+                        not lines[target - 1].strip()
+                        or lines[target - 1].strip().startswith("#")):
+                    target += 1
+            self.by_line.setdefault(target, set()).update(rules)
+            self._just = getattr(self, "_just", {})
+            self._just[(target, frozenset(rules))] = justification
+
+    def suppresses(self, rule: str, line: int) -> Tuple[bool, str]:
+        """Return (suppressed?, justification) for a finding."""
+        rules = self.by_line.get(line, set())
+        if rule in rules:
+            for (tline, rset), just in getattr(self, "_just", {}).items():
+                if tline == line and rule in rset:
+                    return True, just
+            return True, ""
+        return False, ""
+
+    def apply(self, findings: List[Finding]) -> List[Finding]:
+        """Mark findings covered by a pragma; append pragma errors."""
+        for f in findings:
+            if f.rule == BAD_PRAGMA:
+                continue
+            hit, just = self.suppresses(f.rule, f.line)
+            if hit:
+                f.suppressed = True
+                f.justification = just
+        return findings + self.errors

@@ -1,0 +1,62 @@
+"""Abstract-eval probes: device-free checks that trace/eval-shape the
+actual serving entry points over every ModelConfig in ``configs/``.
+
+Unlike the AST rules these import jax and the repro package (CPU
+backend, abstract values only — nothing is compiled or executed on an
+accelerator), so they catch semantic drift the source-level lints
+cannot: a sharding-rule table missing a logical axis some new mixer
+introduced, a decode step that silently widens its carried cache, a
+donated buffer that stops aliasing, a Pallas block shape that stops
+dividing a config's geometry.
+
+Probe findings are not pragma-suppressible: they point at real
+config/geometry inconsistencies, not at a line of code that could be
+annotated.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Optional
+
+from ..report import Finding
+
+
+def _ensure_imports() -> None:
+    """Make ``repro`` importable and force the CPU backend before jax
+    initialises (probes must run identically with or without devices)."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    here = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))          # repo root (tools/..)
+    src = os.path.join(os.path.dirname(here), "src") \
+        if os.path.basename(here) == "tools" else os.path.join(here, "src")
+    for p in (src,):
+        if os.path.isdir(p) and p not in sys.path:
+            sys.path.insert(0, p)
+
+
+def run_probes(only: Optional[set] = None) -> List[Finding]:
+    _ensure_imports()
+    from . import donation, dtypes, pallas, sharding
+    probes = {
+        sharding.PROBE_ID: sharding.check,
+        dtypes.PROBE_ID: dtypes.check,
+        donation.PROBE_ID: donation.check,
+        pallas.PROBE_ID: pallas.check,
+    }
+    findings: List[Finding] = []
+    for probe_id, check in probes.items():
+        if only is not None and probe_id not in only:
+            continue
+        try:
+            findings.extend(check())
+        except Exception as e:  # a crashing probe is itself a finding
+            findings.append(Finding(
+                probe_id, f"tools/swarmlint/probes", 0,
+                f"probe crashed: {type(e).__name__}: {e}"))
+    findings.sort(key=lambda f: (f.rule, f.path, f.line))
+    return findings
+
+
+PROBE_IDS = ("shard-coverage", "decode-dtype", "donation-alias",
+             "pallas-grid")

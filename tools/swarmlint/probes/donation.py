@@ -1,0 +1,82 @@
+"""``donation-alias`` — every donated cache buffer must actually alias
+an output, exactly once.
+
+``donate_argnames`` is a request, not a guarantee: if a donated leaf's
+shape/dtype stops matching any output, XLA silently drops the aliasing
+and the paged pool pays a full cache copy per decode chunk.  Lowering
+is enough to see the result — donated inputs that alias carry a
+``tf.aliasing_output`` attribute in the stablehlo module — so this
+probe abstractly lowers the paged serving entry points (tiny smoke
+engine, CPU backend, nothing compiled or executed) and checks:
+
+* aliased-parameter count == donated cache leaf count (no dropped
+  donations);
+* every aliased output index is distinct (a donated buffer aliased
+  into two outputs is undefined behaviour).
+"""
+from __future__ import annotations
+
+import re
+from typing import List
+
+from ..report import Finding
+
+PROBE_ID = "donation-alias"
+
+_ENGINE_PATH = "src/repro/serving/engine.py"
+_ALIAS_RE = re.compile(r"tf\.aliasing_output\s*=\s*(\d+)")
+
+
+def check() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro import configs as C
+    from repro.models import transformer as T
+    from repro.serving import engine as E
+
+    findings: List[Finding] = []
+    cfg = C.get_smoke("smollm-135m")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = E.InferenceEngine("lint", cfg, params, max_len=64, paged=True)
+
+    B, S, max_new = 2, 32, 4
+    prompts = np.zeros((B, S), np.int32) + 7
+    pb, s_orig = eng._bucket(prompts)
+    max_len = eng._cache_len(pb.shape[1], max_new)
+    handle = eng.pool.alloc(B, max_len // eng.block_len)
+    cache = eng._paged_dev_cache(handle.tables, handle.rows)
+    n_donated = len(jax.tree.leaves(cache))
+    rng = jax.random.PRNGKey(0)
+
+    lowered = {
+        "_generate_fused_paged": E._generate_fused_paged.lower(
+            eng.params, cfg, jnp.asarray(pb), jnp.int32(s_orig), cache,
+            rng, eng.ucfg, max_new, True, impl=eng.attn_decode_impl,
+            mesh=None, rules=eng.rules),
+        "_prefill_into_paged": E._prefill_into_paged.lower(
+            eng.params, cfg, jnp.asarray(pb), jnp.int32(s_orig), cache,
+            mesh=None, rules=eng.rules),
+        "_decode_scan_paged": E._decode_scan_paged.lower(
+            eng.params, cfg, jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B, cfg.vocab_size), jnp.float32), cache,
+            jnp.full((B,), s_orig, jnp.int32), rng, eng.ucfg, 4, True,
+            impl=eng.attn_decode_impl, mesh=None, rules=eng.rules),
+    }
+    eng.pool.release(handle)
+
+    for name, low in lowered.items():
+        indices = [int(m) for m in _ALIAS_RE.findall(low.as_text())]
+        if len(indices) != n_donated:
+            findings.append(Finding(
+                PROBE_ID, _ENGINE_PATH, 0,
+                f"{name}: {len(indices)} of {n_donated} donated cache "
+                "leaves alias an output; the rest are silently copied "
+                "(shape/dtype mismatch between donated input and result)"))
+        dups = sorted({i for i in indices if indices.count(i) > 1})
+        if dups:
+            findings.append(Finding(
+                PROBE_ID, _ENGINE_PATH, 0,
+                f"{name}: output indices {dups} are aliased by more than "
+                "one donated buffer"))
+    return findings

@@ -1,0 +1,68 @@
+"""``shard-coverage`` — every logical axis name the models emit must be
+resolvable by every serving rule table.
+
+``spec_for`` silently replicates a logical axis it has no rule for, so
+a new mixer family (or a renamed axis) can quietly turn a sharded
+dimension into a replicated one on the whole fleet.  This probe walks
+``param_axes`` / ``cache_axes`` / ``paged_cache_axes`` for every config
+in ``configs/`` and fails on any axis name missing from any rule set in
+``sharding.RULE_SETS``.
+"""
+from __future__ import annotations
+
+from typing import List, Set
+
+from ..report import Finding
+
+PROBE_ID = "shard-coverage"
+
+_SHARDING_PATH = "src/repro/distributed/sharding.py"
+
+
+def _axis_names(tree) -> Set[str]:
+    names: Set[str] = set()
+
+    def walk(node) -> None:
+        if isinstance(node, str):
+            names.add(node)
+        elif isinstance(node, (list, tuple)):
+            for item in node:
+                walk(item)
+        elif isinstance(node, dict):
+            for item in node.values():
+                walk(item)
+        elif hasattr(node, "__dataclass_fields__"):
+            for f in node.__dataclass_fields__:
+                walk(getattr(node, f))
+
+    walk(tree)
+    return names
+
+
+def check() -> List[Finding]:
+    from repro import configs as C
+    from repro.distributed import sharding as Sh
+    from repro.models import transformer as T
+
+    findings: List[Finding] = []
+    for arch in C.ARCH_IDS:
+        cfg = C.get_config(arch)  # metadata only: no arrays materialised
+        param_names = _axis_names(T.param_axes(cfg))
+        act_names = _axis_names(T.cache_axes(cfg)) \
+            | _axis_names(T.paged_cache_axes(cfg))
+        for rules_name, rules in sorted(Sh.RULE_SETS.items()):
+            missing_p = sorted(param_names - set(rules.param_rules))
+            missing_a = sorted(act_names - set(rules.act_rules))
+            if missing_p:
+                findings.append(Finding(
+                    PROBE_ID, _SHARDING_PATH, 0,
+                    f"{arch}: param logical axes {missing_p} have no rule "
+                    f"in {rules_name.upper()}_RULES; spec_for would "
+                    "silently replicate them"))
+            if missing_a:
+                findings.append(Finding(
+                    PROBE_ID, _SHARDING_PATH, 0,
+                    f"{arch}: cache logical axes {missing_a} have no rule "
+                    f"in {rules_name.upper()}_RULES; decode carries would "
+                    "silently replicate them"))
+    return findings

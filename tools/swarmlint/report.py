@@ -1,0 +1,53 @@
+"""Finding model and renderers for swarmlint.
+
+A ``Finding`` is one violation at one source location.  Findings are
+plain data so the CLI can render them as human-readable text or as
+machine-readable JSON (``--json``), and so tests can assert on them
+structurally instead of scraping output.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str                 # rule id, e.g. "donation-reuse"
+    path: str                 # file the violation lives in
+    line: int                 # 1-based line number
+    message: str              # human-readable description
+    col: int = 0              # 0-based column offset
+    suppressed: bool = False  # True when an ignore[] pragma covers it
+    justification: str = ""   # the pragma's justification text, if any
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def render_text(findings: Iterable[Finding], *,
+                show_suppressed: bool = False) -> str:
+    lines = []
+    for f in findings:
+        if f.suppressed and not show_suppressed:
+            continue
+        tag = " (suppressed)" if f.suppressed else ""
+        lines.append(f"{f.location()}: {f.rule}: {f.message}{tag}")
+    return "\n".join(lines)
+
+
+def render_json(findings: Iterable[Finding]) -> str:
+    fs = list(findings)
+    active = [f for f in fs if not f.suppressed]
+    return json.dumps({
+        "findings": [f.to_dict() for f in fs],
+        "counts": {
+            "total": len(fs),
+            "active": len(active),
+            "suppressed": len(fs) - len(active),
+        },
+    }, indent=2)

@@ -1,0 +1,45 @@
+"""AST rule registry: stdlib-ast lints that run file-by-file with no
+jax import and no devices."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+from ..astutil import SourceFile, iter_py_files
+from ..pragmas import PragmaMap
+from ..report import Finding
+from . import donation, dtype, rng, tracer
+
+# rule-id -> module; a module's check(SourceFile) may emit several ids
+AST_RULE_IDS: Dict[str, object] = {
+    donation.RULE_REUSE: donation,
+    donation.RULE_DUP: donation,
+    rng.RULE_GLOBAL: rng,
+    rng.RULE_KEY: rng,
+    tracer.RULE: tracer,
+    dtype.RULE: dtype,
+}
+
+_CHECKERS = (donation.check, rng.check, tracer.check, dtype.check)
+
+
+def run_ast_rules(paths: Iterable[str],
+                  only: Optional[set] = None) -> List[Finding]:
+    """Run every AST rule over every .py file under ``paths``; apply
+    pragmas; return all findings (suppressed ones marked)."""
+    findings: List[Finding] = []
+    for root in paths:
+        for path in iter_py_files(root):
+            try:
+                src = SourceFile.load(path)
+            except SyntaxError as e:
+                findings.append(Finding(
+                    "parse-error", path, e.lineno or 0, str(e.msg)))
+                continue
+            file_findings: List[Finding] = []
+            for checker in _CHECKERS:
+                file_findings.extend(checker(src))
+            if only is not None:
+                file_findings = [f for f in file_findings if f.rule in only]
+            findings.extend(PragmaMap(path, src.text).apply(file_findings))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

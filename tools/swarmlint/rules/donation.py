@@ -1,0 +1,111 @@
+"""Donation rules.
+
+``donation-reuse`` — a caller passes a variable into a jit with
+``donate_argnames`` covering that parameter, then reads the same
+variable again without rebinding it.  On TPU the donated buffer is
+aliased into the outputs and invalidated; the reuse returns garbage (or
+a deleted-buffer error) that CPU interpret runs never surface.
+
+``donation-dup`` — a jit declaration whose ``donate_argnames`` names a
+parameter twice, names a parameter that does not exist, or names one
+that is also in ``static_argnames`` (static args have no buffers to
+donate; XLA silently ignores the donation and the memory win is lost).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from ..astutil import (JitSpec, SourceFile, StmtSimulator, _jit_call_kwargs,
+                       build_jit_registry, dotted, iter_functions)
+from ..report import Finding
+
+RULE_REUSE = "donation-reuse"
+RULE_DUP = "donation-dup"
+
+
+class _DonationSim(StmtSimulator):
+    """state[name] = ("dead", kill_line, callee) after a donating call."""
+
+    def __init__(self, path: str, fn: ast.FunctionDef,
+                 registry: Dict[str, JitSpec]):
+        super().__init__(path, fn)
+        self.registry = registry
+
+    def on_load(self, name: str, node: ast.AST) -> None:
+        st = self.state.get(name)
+        if isinstance(st, tuple) and st[0] == "dead":
+            self.emit(RULE_REUSE, node.lineno,
+                      f"'{name}' was donated to jitted '{st[2]}' on line "
+                      f"{st[1]} and is reused here without being rebound; "
+                      "the donated buffer is invalid after the call",
+                      node.col_offset)
+
+    def on_call(self, call: ast.Call) -> None:
+        callee = dotted(call.func)
+        spec = self.registry.get(callee) if callee else None
+        if spec is None or not spec.donate:
+            return
+        donated_vars = []
+        for i, arg in enumerate(call.args):
+            if (isinstance(arg, ast.Name) and i < len(spec.params)
+                    and spec.params[i] in spec.donate):
+                donated_vars.append(arg.id)
+        for kw in call.keywords:
+            if isinstance(kw.value, ast.Name) and kw.arg in spec.donate:
+                donated_vars.append(kw.value.id)
+        for var in donated_vars:
+            self.state[var] = ("dead", call.lineno, spec.name)
+
+    def on_store(self, name: str, node: ast.AST) -> None:
+        self.state.pop(name, None)
+
+
+def _donate_list(dec: ast.expr) -> List[str]:
+    """donate_argnames as a raw list (duplicates preserved)."""
+    if not isinstance(dec, ast.Call):
+        return []
+    kwargs = _jit_call_kwargs(dec)
+    if not kwargs or "donate_argnames" not in kwargs:
+        return []
+    node = kwargs["donate_argnames"]
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+def check(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    registry = build_jit_registry(src.tree)
+
+    # declaration-level checks
+    for fn in iter_functions(src.tree):
+        spec = registry.get(fn.name)
+        if spec is None or spec.node is not fn:
+            continue
+        raw = []
+        for dec in fn.decorator_list:
+            raw = _donate_list(dec)
+            if raw:
+                break
+        for name in sorted(set(n for n in raw if raw.count(n) > 1)):
+            findings.append(Finding(
+                RULE_DUP, src.path, fn.lineno,
+                f"'{fn.name}' donates parameter '{name}' more than once"))
+        for name in sorted(spec.donate - set(spec.params)):
+            findings.append(Finding(
+                RULE_DUP, src.path, fn.lineno,
+                f"'{fn.name}' donates '{name}' which is not a parameter"))
+        for name in sorted(spec.donate & spec.static):
+            findings.append(Finding(
+                RULE_DUP, src.path, fn.lineno,
+                f"'{fn.name}' marks '{name}' both static and donated; "
+                "static arguments have no device buffer to donate"))
+
+    # caller-side reuse
+    for fn in iter_functions(src.tree):
+        findings.extend(_DonationSim(src.path, fn, registry).run())
+    return findings

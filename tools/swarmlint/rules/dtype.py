@@ -1,0 +1,90 @@
+"""``dtype-drift`` — float32 creeping into bf16-resident cache/state.
+
+The serving stack keeps every long-lived cache (KV blocks, recurrent
+state, pool arrays) in ``cfg.dtype`` (bfloat16 by default); a cache
+initialiser that allocates ``float32`` — explicitly, or implicitly by
+omitting the dtype so jnp defaults to f32 — doubles resident cache
+memory and silently changes decode numerics when the state round-trips
+through f32.  Intentional f32 accumulators (recurrences that drift in
+bf16) carry a pragma with the justification.
+
+Scope: functions whose name marks them as cache/state initialisers
+(``init_*``, ``grow_*``, ``*_carry``) in ``models/``, ``serving/`` and
+``kernels/``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from ..astutil import SourceFile, dotted, iter_functions
+from ..report import Finding
+
+RULE = "dtype-drift"
+
+APPLY_DIRS = ("models", "serving", "kernels")
+_INIT_RE = re.compile(r"^(init_|grow_)|_carry$|_init$")
+_ALLOC_FNS = {"zeros", "ones", "empty", "full", "zeros_like", "full_like"}
+_F32_NAMES = {"jnp.float32", "np.float32", "numpy.float32",
+              "jax.numpy.float32"}
+# positional index of the dtype argument per constructor
+_DTYPE_POS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2,
+              "zeros_like": 1, "full_like": 2}
+
+
+def _is_f32_literal(node: ast.AST) -> bool:
+    name = dotted(node)
+    if name in _F32_NAMES:
+        return True
+    return isinstance(node, ast.Constant) and node.value == "float32"
+
+
+def _dtype_arg(call: ast.Call, fn_last: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    pos = _DTYPE_POS.get(fn_last)
+    if pos is not None and len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def check(src: SourceFile) -> List[Finding]:
+    parts = src.path.replace("\\", "/").split("/")
+    if not any(d in parts for d in APPLY_DIRS):
+        return []
+    findings: List[Finding] = []
+    for fn in iter_functions(src.tree):
+        if not _INIT_RE.search(fn.name):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted(node.func) or ""
+            head, _, last = fname.rpartition(".")
+            if last in _ALLOC_FNS and head in ("jnp", "jax.numpy", "np",
+                                               "numpy"):
+                dt = _dtype_arg(node, last)
+                if dt is None and not last.endswith("_like"):
+                    findings.append(Finding(
+                        RULE, src.path, node.lineno,
+                        f"'{fn.name}' allocates with `{fname}` and no "
+                        "dtype; jnp defaults to float32 — pass cfg.dtype "
+                        "(or an explicit integer dtype)",
+                        node.col_offset))
+                elif dt is not None and _is_f32_literal(dt):
+                    findings.append(Finding(
+                        RULE, src.path, node.lineno,
+                        f"'{fn.name}' allocates cache/state as literal "
+                        "float32; caches live in cfg.dtype (bf16) — f32 "
+                        "doubles resident cache memory",
+                        node.col_offset))
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "astype" and node.args and \
+                    _is_f32_literal(node.args[0]):
+                findings.append(Finding(
+                    RULE, src.path, node.lineno,
+                    f"'{fn.name}' widens cache/state to float32 via "
+                    ".astype", node.col_offset))
+    return findings

@@ -1,0 +1,175 @@
+"""RNG discipline rules.
+
+``global-rng`` — no global-state randomness (stdlib ``random.*`` module
+draws, ``np.random.*`` module-level draws) in ``serving/`` or
+``kernels/``: anything on a hot serving path must draw from an owned,
+seeded generator (``np.random.RandomState(seed)`` / jax PRNG keys) so
+runs are bitwise reproducible and fault injection replays exactly
+(PR 8's "empty FaultPlan draws zero rng" contract).
+
+``key-reuse`` — a jax PRNG key is consumed at most once per binding:
+after a key variable is passed into any call it must be rebound
+(typically via ``rng, sub = jax.random.split(rng)``) before being
+passed again.  Reusing a key correlates streams that must be
+independent; the classic failure is passing a live key into a loop body
+every iteration.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set, Tuple
+
+from ..astutil import SourceFile, StmtSimulator, dotted, iter_functions
+from ..report import Finding
+
+RULE_GLOBAL = "global-rng"
+RULE_KEY = "key-reuse"
+
+# directories (path fragments) where global-state randomness is banned
+GLOBAL_RNG_DIRS = ("serving", "kernels")
+
+_NP_DRAWS = {
+    "seed", "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "uniform", "normal", "standard_normal", "choice",
+    "permutation", "shuffle", "beta", "binomial", "poisson", "exponential",
+    "gamma", "bytes", "set_state",
+}
+_STDLIB_DRAWS = {
+    "seed", "random", "randint", "randrange", "uniform", "gauss",
+    "normalvariate", "choice", "choices", "sample", "shuffle",
+    "betavariate", "expovariate", "getrandbits", "triangular",
+    "vonmisesvariate", "paretovariate", "setstate",
+}
+
+_KEY_PARAM_RE = re.compile(r"^(rng|key|prng_key|.*_rng|.*_key)$")
+_KEY_FNS = ("jax.random.PRNGKey", "jax.random.key", "jax.random.fold_in",
+            "jax.random.split", "jax.random.clone", "random.PRNGKey",
+            "random.fold_in", "random.split")
+
+
+def _numpy_and_random_aliases(tree: ast.Module) -> Tuple[Set[str], Set[str],
+                                                         Set[str]]:
+    """(numpy aliases, numpy.random aliases, stdlib random aliases)."""
+    np_alias, npr_alias, rand_alias = set(), set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    np_alias.add(a.asname or "numpy")
+                elif a.name == "numpy.random":
+                    npr_alias.add(a.asname or "numpy.random")
+                elif a.name == "random":
+                    rand_alias.add(a.asname or "random")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "numpy":
+                for a in node.names:
+                    if a.name == "random":
+                        npr_alias.add(a.asname or "random")
+    return np_alias, npr_alias, rand_alias
+
+
+def _check_global_rng(src: SourceFile) -> List[Finding]:
+    parts = src.path.replace("\\", "/").split("/")
+    if not any(d in parts for d in GLOBAL_RNG_DIRS):
+        return []
+    np_alias, npr_alias, rand_alias = _numpy_and_random_aliases(src.tree)
+    findings: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted(node.func)
+        if name is None or "." not in name:
+            continue
+        head, _, fn = name.rpartition(".")
+        hit = (
+            (fn in _NP_DRAWS
+             and (head in {f"{a}.random" for a in np_alias}
+                  or head in npr_alias))
+            or (fn in _STDLIB_DRAWS and head in rand_alias)
+        )
+        if hit:
+            findings.append(Finding(
+                RULE_GLOBAL, src.path, node.lineno,
+                f"global-state random draw '{name}()' on a serving/kernel "
+                "path; use a seeded np.random.RandomState / jax PRNG key "
+                "owned by the caller", node.col_offset))
+    return findings
+
+
+def _key_births(stmt: ast.stmt) -> Tuple[List[str], List[str]]:
+    """(new single-key names, names to stop tracking) for one statement.
+
+    ``ks = jax.random.split(k, n)`` binds an ARRAY of keys — rows are
+    consumed individually, so the container itself is exempt."""
+    if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+        return [], []
+    value, target = stmt.value, stmt.targets[0]
+    if not isinstance(value, ast.Call):
+        return [], []
+    fname = dotted(value.func) or ""
+    last = fname.rsplit(".", 1)[-1]
+    is_key_fn = fname in _KEY_FNS or (
+        "random" in fname and last in ("PRNGKey", "fold_in", "split",
+                                       "clone"))
+    if not is_key_fn:
+        return [], []
+    is_split = last == "split"
+    if isinstance(target, ast.Name):
+        if is_split:
+            return [], [target.id]          # key array, rows used one-off
+        return [target.id], []
+    if isinstance(target, (ast.Tuple, ast.List)) and is_split:
+        names = [e.id for e in target.elts if isinstance(e, ast.Name)]
+        return names, []
+    return [], []
+
+
+class _KeySim(StmtSimulator):
+    """state[name] = 'fresh' | 'consumed@<line>' for tracked key vars."""
+
+    def __init__(self, path: str, fn: ast.FunctionDef):
+        super().__init__(path, fn)
+        self.tracked: Set[str] = {
+            p for p in (a.arg for a in fn.args.args + fn.args.kwonlyargs)
+            if _KEY_PARAM_RE.match(p)}
+        for p in self.tracked:
+            self.state[p] = "fresh"
+
+    def process_stmt(self, stmt: ast.stmt) -> None:
+        births, exempt = _key_births(stmt)
+        super().process_stmt(stmt)
+        for n in births:
+            self.tracked.add(n)
+            self.state[n] = "fresh"
+        for n in exempt:
+            self.tracked.discard(n)
+            self.state.pop(n, None)
+
+    def on_call(self, call: ast.Call) -> None:
+        args = list(call.args) + [kw.value for kw in call.keywords]
+        for arg in args:
+            if not (isinstance(arg, ast.Name) and arg.id in self.tracked):
+                continue
+            st = self.state.get(arg.id, "fresh")
+            if isinstance(st, str) and st.startswith("consumed@"):
+                prev = st.split("@", 1)[1]
+                self.emit(RULE_KEY, call.lineno,
+                          f"PRNG key '{arg.id}' passed to a call here but "
+                          f"already consumed at line {prev} without being "
+                          "split or rebound (possible cross-iteration "
+                          "reuse); use jax.random.split",
+                          call.col_offset)
+            else:
+                self.state[arg.id] = f"consumed@{call.lineno}"
+
+    def on_store(self, name: str, node: ast.AST) -> None:
+        if name in self.tracked:
+            self.state[name] = "fresh"
+
+
+def check(src: SourceFile) -> List[Finding]:
+    findings = _check_global_rng(src)
+    for fn in iter_functions(src.tree):
+        findings.extend(_KeySim(src.path, fn).run())
+    return findings

@@ -1,0 +1,122 @@
+"""``tracer-leak`` — host-Python operations on traced values inside a
+jit-decorated body.
+
+Inside ``jax.jit``, a Python ``if``/``while`` on a traced value raises
+``TracerBoolConversionError`` at trace time at best, or silently bakes
+one branch into the compiled program when the value happens to be
+concrete during tracing.  ``int()``/``float()``/``bool()``/``.item()``/
+``np.asarray()`` force a device sync (or fail abstractly).  Shape and
+dtype inspection (``x.shape``, ``x.ndim``, ``len(x)``) is static and
+fine, as is branching on parameters named in ``static_argnames``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..astutil import SourceFile, build_jit_registry, dotted
+from ..report import Finding
+
+RULE = "tracer-leak"
+
+# attributes of a traced array that are static at trace time
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "weak_type"}
+# calls whose result is static regardless of traced inputs
+_STATIC_FNS = {"len", "isinstance", "type", "getattr", "hasattr", "id"}
+# host-conversion callables that leak a tracer
+_LEAK_FNS = {"int", "float", "bool", "complex"}
+_LEAK_NP_FNS = {"asarray", "array", "ascontiguousarray"}
+_LEAK_METHODS = {"item", "tolist", "__array__"}
+
+
+class _TaintChecker:
+    def __init__(self, path: str, fn: ast.FunctionDef, static: Set[str]):
+        self.path = path
+        self.fn = fn
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args
+                  + fn.args.kwonlyargs]
+        self.taint: Set[str] = {p for p in params if p not in static}
+        self.findings: List[Finding] = []
+
+    def tainted(self, node: ast.AST) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return isinstance(node.ctx, ast.Load) and node.id in self.taint
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Call):
+            fname = dotted(node.func)
+            if fname in _STATIC_FNS:
+                return False
+            return any(self.tainted(a) for a in node.args) or \
+                any(self.tainted(kw.value) for kw in node.keywords) or \
+                self.tainted(node.func)
+        if isinstance(node, ast.Subscript):
+            # x.shape[0] is static; x[0] of a traced x is traced
+            return self.tainted(node.value)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return False
+        return any(self.tainted(c) for c in ast.iter_child_nodes(node))
+
+    def propagate(self) -> None:
+        """Fixed-point taint propagation through simple assignments."""
+        for _ in range(4):
+            changed = False
+            for node in ast.walk(self.fn):
+                if isinstance(node, ast.Assign) and self.tainted(node.value):
+                    for t in node.targets:
+                        for sub in ast.walk(t):
+                            if isinstance(sub, ast.Name) and \
+                                    sub.id not in self.taint:
+                                self.taint.add(sub.id)
+                                changed = True
+            if not changed:
+                return
+
+    def emit(self, node: ast.AST, what: str) -> None:
+        self.findings.append(Finding(
+            RULE, self.path, node.lineno,
+            f"{what} on a traced value inside jitted "
+            f"'{self.fn.name}'; hoist it out of the jit or mark the "
+            "argument static", getattr(node, "col_offset", 0)))
+
+    def run(self) -> List[Finding]:
+        self.propagate()
+        for node in ast.walk(self.fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not self.fn:
+                continue
+            if isinstance(node, (ast.If, ast.While)) and \
+                    self.tainted(node.test):
+                self.emit(node, "Python `if`/`while` branch")
+            elif isinstance(node, ast.Assert) and self.tainted(node.test):
+                self.emit(node, "`assert`")
+            elif isinstance(node, ast.Call):
+                fname = dotted(node.func) or ""
+                args_tainted = any(self.tainted(a) for a in node.args)
+                if fname in _LEAK_FNS and args_tainted:
+                    self.emit(node, f"host conversion `{fname}()`")
+                elif fname.rpartition(".")[2] in _LEAK_NP_FNS and \
+                        fname.split(".")[0] in ("np", "numpy") and \
+                        args_tainted:
+                    self.emit(node, f"`{fname}()` host materialisation")
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _LEAK_METHODS and \
+                        self.tainted(node.func.value):
+                    self.emit(node, f"`.{node.func.attr}()` device sync")
+        return self.findings
+
+
+def check(src: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    registry = build_jit_registry(src.tree)
+    for spec in registry.values():
+        if spec.node is None:
+            continue
+        findings.extend(
+            _TaintChecker(src.path, spec.node, spec.static).run())
+    return findings
