@@ -85,7 +85,19 @@ def view_bytes(cfg, cache: dict, block_len: int) -> int:
                if leaf.ndim >= 4 and leaf.shape[-3] in view_lens)
 
 
-def build_engine(args, impl: str):
+def stored_block_bytes(cfg, block_len: int, cache_quant) -> int:
+    """Device bytes per pool block in the STORED representation (quantized
+    payload + f32 scale sidecar), via eval_shape — no allocation."""
+    from repro.models import transformer as T
+    arrays = jax.eval_shape(lambda: T.init_block_pool(
+        cfg, 8, block_len, 0, cache_quant=cache_quant))
+    kv = sum(leaf.size * leaf.dtype.itemsize
+             for sc in arrays for c in sc.values() if c.kv is not None
+             for leaf in jax.tree_util.tree_leaves(c.kv))
+    return kv // 8
+
+
+def build_engine(args, impl: str, cache_quant=None, pool_blocks=None):
     from repro import configs as C
     from repro.core.uncertainty import UncertaintyConfig
     from repro.models import transformer as T
@@ -93,16 +105,19 @@ def build_engine(args, impl: str):
     cfg = dataclasses.replace(C.get_smoke(args.arch), vocab_size=512)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = InferenceEngine(
-        f"microbench-{impl}", cfg, params,
+        f"microbench-{impl}-{cache_quant or 'bf16'}", cfg, params,
         UncertaintyConfig(mode="distribution"), paged=True,
-        block_len=args.block_len, pool_blocks=args.pool_blocks,
+        block_len=args.block_len,
+        pool_blocks=pool_blocks or args.pool_blocks,
         max_len=args.ctx + args.steps + 32, attn_decode_impl=impl,
+        cache_quant=cache_quant,
         compilation_cache_dir=args.compilation_cache_dir)
     return eng
 
 
-def bench_impl(args, impl: str, prompts, span) -> dict[str, dict]:
-    eng = build_engine(args, impl)
+def bench_impl(args, impl: str, prompts, span,
+               cache_quant=None) -> dict[str, dict]:
+    eng = build_engine(args, impl, cache_quant=cache_quant)
     B = args.batch
     p_bytes = tree_bytes(eng.params)
 
@@ -110,6 +125,11 @@ def bench_impl(args, impl: str, prompts, span) -> dict[str, dict]:
     st = eng.absorb(prompts)
     cache, _ = eng._paged_grown(st, st.offset + args.steps)
     v_bytes = view_bytes(eng.cfg, cache, eng.block_len)
+    if cache_quant is not None:
+        # the decode read stream is the STORED pool bytes (quantized
+        # payload + scales), not the bf16 view eval_shape reports
+        v_bytes = v_bytes * eng.pool.block_bytes \
+            // stored_block_bytes(eng.cfg, eng.block_len, None)
     kv_write = v_bytes * args.ctx // cache["table"].shape[1] // eng.block_len
 
     def run_prefill():
@@ -150,6 +170,46 @@ def bench_impl(args, impl: str, prompts, span) -> dict[str, dict]:
     return out
 
 
+def session_density(args) -> dict[str, dict]:
+    """Concurrent sessions per fixed pool byte budget, per cache format.
+
+    The budget is what ``--pool-blocks`` bf16 blocks cost; each format
+    gets ``budget // block_bytes`` blocks and admits ``ctx + steps``-long
+    sessions through the REAL allocator until famine.  Runs on the FULL
+    arch geometry (no weights needed — this is allocator arithmetic):
+    the smoke configs' tiny head_dim inflates the f32 scale sidecar's
+    share ~4x and would understate density.  int8 lands ~1.87x bf16 —
+    the 2x payload saving minus the scale sidecar (4/head_dim of the
+    payload) and the shared int32 pos rows; fp8 is byte-identical to
+    int8 — its win is range, not density."""
+    from repro import configs as C
+    from repro.serving.cache_manager import CachePool, PoolExhaustedError
+    cfg = C.get_config(args.arch)
+    nb_sess = -(-(args.ctx + args.steps) // args.block_len)
+    budget = args.pool_blocks * stored_block_bytes(cfg, args.block_len, None)
+    out = {}
+    for quant in (None, "int8", "fp8"):
+        bb = stored_block_bytes(cfg, args.block_len, quant)
+        n_blocks = max(budget // bb, nb_sess)
+        # rows (recurrent state) sit outside the KV block budget; size
+        # them off the session bound so block famine is the binding limit
+        pool = CachePool(cfg, args.block_len, n_blocks,
+                         n_rows=n_blocks // nb_sess + 1, cache_quant=quant)
+        n = 0
+        try:
+            while True:
+                pool.alloc(1, nb_sess)
+                n += 1
+        except PoolExhaustedError:
+            pass
+        out[quant or "bf16"] = {
+            "sessions": n, "blocks": pool.n_blocks,
+            "block_kib": pool.block_bytes / 1024,
+            "pool_mib": pool.pool_bytes / 2**20,
+        }
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", default="smollm-135m")
@@ -170,6 +230,17 @@ def main(argv=None) -> int:
                          "the slot-linear KV view")
     ap.add_argument("--assert-ratio", type=float, default=None, metavar="X",
                     help="fail unless kernel decode_step <= X * gather")
+    ap.add_argument("--quant", choices=("int8", "fp8"), default=None,
+                    help="also bench a cache_quant engine (kernel impl) "
+                         "and the per-format session_density table")
+    ap.add_argument("--assert-density", type=float, default=None,
+                    metavar="X", help="fail unless int8 fits >= X times "
+                                      "the bf16 sessions at fixed pool "
+                                      "bytes (CI floor: 1.8)")
+    ap.add_argument("--assert-quant-decode", type=float, default=None,
+                    metavar="X", help="fail unless the quantized decode "
+                                      "step is <= X * the bf16 one "
+                                      "(CI ceiling: 1.15 on CPU)")
     ap.add_argument("--compilation-cache-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -180,15 +251,21 @@ def main(argv=None) -> int:
 
     results = {impl: bench_impl(args, impl, prompts, span)
                for impl in ("kernel", "gather")}
+    impls = [("kernel", "kernel"), ("gather", "gather")]
+    if args.quant:
+        results[f"kernel@{args.quant}"] = bench_impl(
+            args, "kernel", prompts, span, cache_quant=args.quant)
+        impls.append((f"kernel@{args.quant}", f"kernel@{args.quant}"))
 
-    hdr = (f"{'phase':<22}{'impl':<8}{'ms/call':>10}{'est MB':>10}"
+    hdr = (f"{'phase':<22}{'impl':<14}{'ms/call':>10}{'est MB':>10}"
            f"{'HBM-model ms':>14}{'frac':>8}")
     print(hdr)
     print("-" * len(hdr))
     for name in ("prefill", "continuation_insert", "decode_step"):
-        for impl in ("kernel", "gather"):
-            r = results[impl][name]
-            print(f"{name:<22}{impl:<8}{r['ms']:>10.3f}{r['est_mb']:>10.2f}"
+        for key, label in impls:
+            r = results[key][name]
+            print(f"{name:<22}{label:<14}{r['ms']:>10.3f}"
+                  f"{r['est_mb']:>10.2f}"
                   f"{r['hbm_model_ms']:>14.4f}{r['hbm_frac']:>8.3f}")
     ratio = (results["kernel"]["decode_step"]["ms"]
              / results["gather"]["decode_step"]["ms"])
@@ -196,6 +273,29 @@ def main(argv=None) -> int:
           f"(kernel decode-step / gather decode-step; <1 = kernel faster)")
 
     failed = False
+    if args.quant:
+        dens = session_density(args)
+        print(f"\n{'session_density':<22}{'format':<14}{'sessions':>10}"
+              f"{'blocks':>10}{'block KiB':>12}{'pool MiB':>10}")
+        for fmt, d in dens.items():
+            print(f"{'':<22}{fmt:<14}{d['sessions']:>10}{d['blocks']:>10}"
+                  f"{d['block_kib']:>12.1f}{d['pool_mib']:>10.1f}")
+        drat = dens["int8"]["sessions"] / dens["bf16"]["sessions"]
+        qrat = (results[f"kernel@{args.quant}"]["decode_step"]["ms"]
+                / results["kernel"]["decode_step"]["ms"])
+        print(f"session_density_int8_vs_bf16: {drat:.3f}x at fixed pool "
+              "bytes (2x payload minus the f32 scale sidecar + pos rows)")
+        print(f"quant_decode_step_vs_bf16: {qrat:.3f}x wall-clock")
+        if args.assert_density is not None:
+            ok = drat >= args.assert_density
+            print(f"density_floor: {'OK' if ok else 'FAIL'} "
+                  f"({drat:.3f} vs >= {args.assert_density})")
+            failed |= not ok
+        if args.assert_quant_decode is not None:
+            ok = qrat <= args.assert_quant_decode
+            print(f"quant_decode_ceiling: {'OK' if ok else 'FAIL'} "
+                  f"({qrat:.3f} vs <= {args.assert_quant_decode})")
+            failed |= not ok
     if args.check_hlo:
         from repro.serving.hlo_probe import assert_no_slot_linear_kv
         try:

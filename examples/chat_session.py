@@ -24,9 +24,11 @@ prefill total — verified against per-session cold prefills and timed.
 
 ``--attn-decode-impl {kernel,gather}`` selects the paged engine's decode-
 attention path (default: measured-best per backend — the in-place
-block-table kernel; see docs/RUNTIME.md "Kernel-first decode") and
-``--compilation-cache-dir DIR`` persists every XLA executable so a re-run
-of this script skips all compilation.
+block-table kernel; see docs/RUNTIME.md "Kernel-first decode"),
+``--cache-quant {int8,fp8}`` stores its KV blocks quantized (same greedy
+tokens under the budgeted-parity contract of docs/RUNTIME.md "Quantized
+caches"), and ``--compilation-cache-dir DIR`` persists every XLA
+executable so a re-run of this script skips all compilation.
 """
 
 import argparse
@@ -46,6 +48,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--shared-system-prompt", action="store_true")
 ap.add_argument("--attn-decode-impl", choices=("kernel", "gather"),
                 default=None)
+ap.add_argument("--cache-quant", choices=("int8", "fp8"), default=None,
+                help="store the paged engine's KV blocks quantized "
+                     "(docs/RUNTIME.md 'Quantized caches')")
 ap.add_argument("--compilation-cache-dir", default=None)
 args = ap.parse_args()
 
@@ -120,6 +125,7 @@ if args.shared_system_prompt:
     paged = InferenceEngine("chat-paged", cfg, params=eng.params,
                             paged=True, block_len=32, pool_blocks=512,
                             attn_decode_impl=args.attn_decode_impl,
+                            cache_quant=args.cache_quant,
                             compilation_cache_dir=args.compilation_cache_dir)
     sys_prompt = rng.randint(7, cfg.vocab_size, size=(1, 448)).astype(np.int32)
 

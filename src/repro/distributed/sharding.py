@@ -112,6 +112,11 @@ ACT_RULES: dict[str, Chain] = {
     # slot's blocks land on few 'data' shards; tables/row-ids ride with
     # act_batch and the block_len dim inside a block stays unsharded.
     "act_pool": _chain(("pod", "data"), "data"),
+    # quantized-pool scale sidecar (cache_quant engines): the per-row f32
+    # scale leaves (n_blocks, L, K) shard exactly like their pool — block
+    # dim over 'data' — so a block and its scales always land on the same
+    # shard and the fused-dequant read never crosses devices for a scale.
+    "act_pool_scale": _chain(("pod", "data"), "data"),
 }
 
 # Dims with lower numbers claim mesh axes first (a KV cache lists seq before
@@ -120,7 +125,7 @@ AXIS_PRIORITY = {
     "act_kv_heads": 0, "act_heads": 0, "heads": 0, "kv_heads": 0,
     "ffn": 0, "experts": 0, "vocab": 0, "act_vocab": 0, "act_ffn": 0,
     "act_experts": 0, "ssm_inner": 0, "act_ssm_inner": 0,
-    "act_batch": 0, "act_pool": 0, "embed": 1,
+    "act_batch": 0, "act_pool": 0, "act_pool_scale": 0, "embed": 1,
     "act_kv_seq": 2,
 }
 

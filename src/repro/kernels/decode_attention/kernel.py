@@ -62,11 +62,9 @@ def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, idx_ref, o_ref,
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
-def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, idx_ref,
-                         p0_ref, dk_ref, dv_ref, dpos_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, L: int, nb: int,
+def _paged_decode_kernel(tbl_ref, *refs, L: int, nb: int,
                          window: int | None, scale: float, n_blocks: int,
-                         ring: bool):
+                         ring: bool, quantized: bool):
     """Streaming-softmax body over a slot's pool blocks plus the dispatch's
     delta write buffer.
 
@@ -83,7 +81,20 @@ def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, idx_ref,
     view is shorter than the window, so position masking alone is not
     enough).  Delta-side masks: unwritten rows (pos -1), future rows
     (pos > idx), and for ring layers rows superseded in-ring by a later
-    write to the same slot (pos <= idx - ring length)."""
+    write to the same slot (pos <= idx - ring length).
+
+    With ``quantized`` the pool operands are int8/fp8 and two extra f32
+    scale refs ride after v: the k-scale folds into the scores after the
+    QK dot (a per-slot constant factors out of the D contraction exactly)
+    and the v-scale folds into the softmax weights before the PV dot, so
+    the dequantized cache is never materialised.  Delta rows stay bf16
+    and skip both."""
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, pos_ref, idx_ref, p0_ref,
+         dk_ref, dv_ref, dpos_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, pos_ref, idx_ref, p0_ref,
+         dk_ref, dv_ref, dpos_ref, o_ref, m_ref, l_ref, acc_ref) = refs
     b = pl.program_id(0)
     t = pl.program_id(2)
 
@@ -98,15 +109,19 @@ def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, idx_ref,
     p0 = p0_ref[0]                                    # () dispatch start
     ring_len = nb * L
 
-    def update(k, v, valid):
+    def update(k, v, valid, k_s=None, v_s=None):
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
+        if k_s is not None:
+            s = s * k_s[None, :]                     # fused k dequant
         s = jnp.where(valid[None, :], s, NEG_INF)
         m_old, l_old = m_ref[...], l_ref[...]
         m_new = jnp.maximum(m_old, s.max(axis=1))
         p = jnp.exp(s - m_new[:, None])
         corr = jnp.exp(m_old - m_new)
         l_ref[...] = l_old * corr + p.sum(axis=1)
+        if v_s is not None:
+            p = p * v_s[None, :]                     # fused v dequant
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -126,7 +141,11 @@ def _paged_decode_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, idx_ref,
             covered = (sl - p0) % ring_len <= idx - p0
         else:
             covered = (sl >= p0) & (sl <= idx)
-        update(k, v, valid & ~covered)
+        if quantized:
+            update(k, v, valid & ~covered,
+                   ks_ref[0, :, 0], vs_ref[0, :, 0])  # (L,) f32 rows
+        else:
+            update(k, v, valid & ~covered)
 
     @pl.when(t == nb)
     def _delta():
@@ -147,6 +166,8 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
                                   v_pool: jax.Array, pos_pool: jax.Array,
                                   table: jax.Array, index: jax.Array, *,
                                   window: int | None = None,
+                                  k_scale: jax.Array | None = None,
+                                  v_scale: jax.Array | None = None,
                                   delta_k: jax.Array | None = None,
                                   delta_v: jax.Array | None = None,
                                   delta_pos: jax.Array | None = None,
@@ -173,20 +194,29 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
     expected to be pre-sliced to the window so the ring length is the view
     length nb*L — are masked from the pool-side read.  Omitting the delta
     operands degrades to pure pool attention (a masked 1-row dummy rides
-    the last grid step)."""
+    the last grid step).
+
+    With ``k_scale``/``v_scale`` (N, L, K) f32 the pool is quantized
+    (int8/fp8) and the scale rows ride the same table-indexed DMA as
+    their blocks; dequant is folded into the streaming softmax (see
+    ``_paged_decode_kernel``), so VMEM traffic per block stays at the
+    quantized byte width plus one f32 scale per row.  Delta operands
+    stay bf16 regardless."""
     B, K, G, D = q.shape
     N, L = k_pool.shape[0], k_pool.shape[1]
     nb = table.shape[1]
+    quantized = k_scale is not None
     if delta_k is None:
-        delta_k = jnp.zeros((B, 1, K, D), k_pool.dtype)
-        delta_v = jnp.zeros((B, 1, K, D), v_pool.dtype)
+        dt = jnp.bfloat16 if quantized else k_pool.dtype
+        delta_k = jnp.zeros((B, 1, K, D), dt)
+        delta_v = jnp.zeros((B, 1, K, D), dt)
         delta_pos = jnp.full((B, 1), -1, jnp.int32)
         p0 = index + 1                   # covers nothing, masks nothing
     S = delta_pos.shape[1]
     grid = (B, K, nb + 1)
     kern = functools.partial(_paged_decode_kernel, L=L, nb=nb,
                              window=window, scale=D ** -0.5, n_blocks=N,
-                             ring=window is not None)
+                             ring=window is not None, quantized=quantized)
 
     def blk(b, h, t, tbl):
         # clamp: the delta step (t == nb) and sentinel entries still need an
@@ -196,20 +226,33 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
     def blk_pos(b, h, t, tbl):
         return (jnp.minimum(tbl[b, jnp.minimum(t, nb - 1)], N - 1), 0)
 
+    def blk_scale(b, h, t, tbl):
+        return (jnp.minimum(tbl[b, jnp.minimum(t, nb - 1)], N - 1), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
+        pl.BlockSpec((1, L, 1, D), blk),
+        pl.BlockSpec((1, L, 1, D), blk),
+    ]
+    operands = [q.reshape(B, K, G, D), k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, L, 1), blk_scale),
+                     pl.BlockSpec((1, L, 1), blk_scale)]
+        operands += [k_scale, v_scale]
+    in_specs += [
+        pl.BlockSpec((1, L), blk_pos),
+        pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
+        pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
+        pl.BlockSpec((1, S, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
+        pl.BlockSpec((1, S, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
+        pl.BlockSpec((1, S), lambda b, h, t, tbl: (b, 0)),
+    ]
+    operands += [pos_pool, index, p0, delta_k, delta_v, delta_pos]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,            # the block table
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((1, L, 1, D), blk),
-            pl.BlockSpec((1, L, 1, D), blk),
-            pl.BlockSpec((1, L), blk_pos),
-            pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
-            pl.BlockSpec((1,), lambda b, h, t, tbl: (b,)),
-            pl.BlockSpec((1, S, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
-            pl.BlockSpec((1, S, 1, D), lambda b, h, t, tbl: (b, 0, h, 0)),
-            pl.BlockSpec((1, S), lambda b, h, t, tbl: (b, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t, tbl: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
@@ -222,8 +265,7 @@ def paged_decode_attention_pallas(q: jax.Array, k_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
         interpret=interpret,
-    )(table, q.reshape(B, K, G, D), k_pool, v_pool, pos_pool, index, p0,
-      delta_k, delta_v, delta_pos)
+    )(table, *operands)
 
 
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,

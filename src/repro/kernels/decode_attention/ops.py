@@ -22,19 +22,25 @@ def decode_attention(q, k, v, pos, index, *, window=None, bt=512,
 
 @partial(jax.jit, static_argnames=("window", "force_pallas"))
 def paged_decode_attention(q, k_pool, v_pool, pos_pool, table, index, *,
-                           window=None, delta_k=None, delta_v=None,
+                           window=None, k_scale=None, v_scale=None,
+                           delta_k=None, delta_v=None,
                            delta_pos=None, p0=None, force_pallas=False):
     """Block-table decode attention over a paged KV pool: the TPU kernel
     DMAs the slot's pool blocks through the scalar-prefetched table; the
     oracle gathers the linear view and reuses the monolithic reference.
     The optional delta operands overlay the current dispatch's own decode
-    writes (see ``models.attention.attn_decode_paged``)."""
+    writes (see ``models.attention.attn_decode_paged``); the optional
+    ``k_scale``/``v_scale`` (N, L, K) f32 leaves mark the pool as
+    int8/fp8-quantized and both impls fold the dequant into the softmax
+    read."""
     if jax.default_backend() == "tpu" or force_pallas:
         return K.paged_decode_attention_pallas(
             q, k_pool, v_pool, pos_pool, table, index, window=window,
+            k_scale=k_scale, v_scale=v_scale,
             delta_k=delta_k, delta_v=delta_v, delta_pos=delta_pos, p0=p0,
             interpret=jax.default_backend() != "tpu")
     return R.paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table,
-                                        index, window=window, delta_k=delta_k,
+                                        index, window=window, k_scale=k_scale,
+                                        v_scale=v_scale, delta_k=delta_k,
                                         delta_v=delta_v, delta_pos=delta_pos,
                                         p0=p0)

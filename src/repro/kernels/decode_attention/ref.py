@@ -21,7 +21,8 @@ def decode_attention_ref(q, k, v, pos, index, *, window=None):
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table, index, *,
-                               window=None, delta_k=None, delta_v=None,
+                               window=None, k_scale=None, v_scale=None,
+                               delta_k=None, delta_v=None,
                                delta_pos=None, p0=None):
     """Block-table oracle: gather the slot-linear view of the pool
     (k_pool/v_pool (N,L,K,D), pos_pool (N,L), table (B,nb)) and run the
@@ -33,7 +34,10 @@ def paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table, index, *,
     mod the view length for ``window`` layers — are masked and the delta
     rows are appended to the attended set instead (unwritten / future /
     in-ring-superseded rows masked), mirroring the kernel's two-phase
-    read."""
+    read.  With ``k_scale``/``v_scale`` (N, L, K) the pool is quantized;
+    the oracle gathers the scale rows alongside their blocks and
+    materialises the dequantized view before attending — deliberately
+    the thing the fused paths avoid, which is what makes it an oracle."""
     B, nb = table.shape
     N, L = k_pool.shape[0], k_pool.shape[1]
     flat = table.reshape(-1)
@@ -41,6 +45,13 @@ def paged_decode_attention_ref(q, k_pool, v_pool, pos_pool, table, index, *,
         B, nb * L, *k_pool.shape[2:])
     v = jnp.take(v_pool, flat, axis=0, mode="clip").reshape(
         B, nb * L, *v_pool.shape[2:])
+    if k_scale is not None:
+        k_scale = jnp.take(k_scale, flat, axis=0, mode="clip").reshape(
+            B, nb * L, *k_scale.shape[2:])
+        v_scale = jnp.take(v_scale, flat, axis=0, mode="clip").reshape(
+            B, nb * L, *v_scale.shape[2:])
+        k = k.astype(jnp.float32) * k_scale[..., None]  # swarmlint: ignore[quant-scale-drift] oracle materialises the f32 dequantized view on purpose
+        v = v.astype(jnp.float32) * v_scale[..., None]  # swarmlint: ignore[quant-scale-drift] oracle materialises the f32 dequantized view on purpose
     pos = jnp.take(pos_pool, flat, axis=0, mode="clip").reshape(B, nb * L)
     pos = jnp.where(jnp.repeat(table < N, L, axis=1), pos, -1)
     if delta_k is not None:

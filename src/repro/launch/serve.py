@@ -169,6 +169,10 @@ def main():
                     help="paged decode-attention impl (implies --paged); "
                          "default: measured-best per backend — see "
                          "docs/RUNTIME.md 'Kernel-first decode'")
+    ap.add_argument("--cache-quant", choices=("int8", "fp8"), default=None,
+                    help="store paged KV blocks quantized with per-row f32 "
+                         "scales (implies --paged); ~1.9x the sessions per "
+                         "pool byte — see docs/RUNTIME.md 'Quantized caches'")
     ap.add_argument("--compilation-cache-dir", default=None,
                     help="persistent XLA compilation cache directory: a "
                          "relaunched gateway skips every already-seen jit")
@@ -180,12 +184,15 @@ def main():
         mesh = serving_mesh(model_parallel=args.model_parallel)
         print(f"[serve] mesh {dict(mesh.shape)}")
     engine_kw = {}
-    if args.paged or args.attn_decode_impl is not None:
+    if (args.paged or args.attn_decode_impl is not None
+            or args.cache_quant is not None):
         # the study workload batches ~50 queries through each tier, well
         # past the default pool sizing (16 full-length sessions) — give
         # the gateway engines headroom for the full workload batch
         engine_kw.update(paged=True, pool_blocks=1024,
                          attn_decode_impl=args.attn_decode_impl)
+    if args.cache_quant is not None:
+        engine_kw["cache_quant"] = args.cache_quant
     if args.compilation_cache_dir is not None:
         engine_kw["compilation_cache_dir"] = args.compilation_cache_dir
     gw, probe, cloud, world = build_gateway(args.train_steps, args.quorum,

@@ -14,12 +14,13 @@ Decode attends one new token against a (possibly ring-buffered) KV cache.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
+from repro.models import quant as Q
 from repro.models.common import (ModelConfig, ParamDef, apply_rope,
                                  norm_def, normal_init, rmsnorm, rope_angles,
                                  zeros_init)
@@ -144,6 +145,13 @@ class KVCache(NamedTuple):
     k: Array          # (B, T, K, Dh)
     v: Array          # (B, T, K, Dh)
     pos: Array        # (B, T) absolute positions of cached keys, -1 = empty
+    # Quantized POOLS only (cache_quant engines): per-row f32 scales,
+    # (N, L, K) parallel to k/v with the head_dim axis reduced away.  None
+    # (the default) is an empty pytree node, so every bf16 cache — monolithic
+    # caches, gathered views, delta buffers — keeps its exact pre-quant
+    # structure, jit traces and sharding trees included.
+    k_scale: Any = None
+    v_scale: Any = None
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, length: int, local: bool) -> KVCache:
@@ -318,18 +326,31 @@ def _decode_chunk_len(cfg: ModelConfig, length: int) -> int:
 
 def _decode_stream_chunk(carry, qr: Array, k_c: Array, v_c: Array,
                          pos_c: Array, index: Array, cfg: ModelConfig,
-                         local: bool):
+                         local: bool, k_s: Array | None = None,
+                         v_s: Array | None = None):
     """Online-softmax update for ONE (B, cb) KV chunk of a decode attend.
 
     Every decode layout — monolithic cache, gathered paged view, and the
     kernel-first block-table read — pushes its chunks through this exact
     function, so layouts that produce elementwise-equal chunk data are
     bitwise-identical by construction; only chunk *provenance* differs.
+
+    ``k_s``/``v_s`` (B, cb, K) set = quantized pool chunk: ``k_c``/``v_c``
+    hold RAW quantized rows (cast to comp dtype — int8/fp8 values are exact
+    in bf16) and the dequant is fused here, where the accumulator already
+    runs in f32: the k-scale lands on the post-QK scores (a per-(slot,head)
+    constant factors out of the Dh contraction exactly) and the v-scale
+    folds into the softmax weights before the PV contraction — no
+    cache-shaped f32 dequant copy ever exists (the swarmlint
+    ``quant-scale-drift`` contract).  With both None the trace is
+    byte-identical to the pre-quantization one.
     """
     m, l, acc = carry                       # (B,K,G), (B,K,G), (B,K,G,Dh) f32
     # bf16 operands + f32 accumulation: never materialise an f32 cache copy
     s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(cfg.comp_dtype), k_c,
                    preferred_element_type=jnp.float32) * (cfg.head_dim ** -0.5)
+    if k_s is not None:
+        s = s * k_s.transpose(0, 2, 1)[:, :, None, :]       # (B,K,1,cb)
     mask = (pos_c <= index[:, None]) & (pos_c >= 0)
     if local and cfg.window is not None:
         mask &= index[:, None] - pos_c < cfg.window
@@ -338,6 +359,8 @@ def _decode_stream_chunk(carry, qr: Array, k_c: Array, v_c: Array,
     p = jnp.exp(s - m_new[..., None])
     corr = jnp.exp(m - m_new)
     l = l * corr + p.sum(axis=-1)
+    if v_s is not None:
+        p = p * v_s.transpose(0, 2, 1)[:, :, None, :]
     pv = jnp.einsum("bkgt,btkd->bkgd", p.astype(cfg.comp_dtype), v_c,
                     preferred_element_type=jnp.float32)
     acc = acc * corr[..., None] + pv
@@ -426,36 +449,60 @@ def attn_decode(p: dict, x: Array, cache: KVCache, index: Array,
 # ---------------------------------------------------------------------------
 
 PAGED_KV_AXES = ("act_pool", None, "act_kv_heads", None)
+PAGED_SCALE_AXES = ("act_pool_scale", None, "act_kv_heads")
 
 
-def init_paged_kv(cfg: ModelConfig, n_blocks: int, block_len: int) -> KVCache:
+def init_paged_kv(cfg: ModelConfig, n_blocks: int, block_len: int,
+                  cache_quant: str | None = None) -> KVCache:
     """Pool-shaped KV storage: k/v ``(n_blocks, block_len, K, Dh)``, pos
     ``(n_blocks, block_len)`` (-1 = empty).  Local-window layers share the
     same geometry — the window clamp happens at view time through the table
-    slice, not in storage."""
+    slice, not in storage.  ``cache_quant`` set = k/v are stored int8/fp8
+    with per-row f32 scales riding alongside (``quantize_rows(zeros)`` is
+    ``(0, scale=0)``, so a zeroed quantized pool equals a scattered zeroed
+    one)."""
     K, Dh = cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.dtype if cache_quant is None else Q.qdtype(cache_quant)
+
+    def scale():
+        # one alloc per field — aliasing k_scale/v_scale to one buffer
+        # trips the donated pool-reset jit ("donate the same buffer twice")
+        return (None if cache_quant is None
+                else jnp.zeros((n_blocks, block_len, K), jnp.float32))  # swarmlint: ignore[dtype-drift] quant scales MUST be f32 (see quant-scale-drift); K floats per L*K*Dh-element block is noise
     return KVCache(
-        k=jnp.zeros((n_blocks, block_len, K, Dh), cfg.dtype),
-        v=jnp.zeros((n_blocks, block_len, K, Dh), cfg.dtype),
+        k=jnp.zeros((n_blocks, block_len, K, Dh), dt),
+        v=jnp.zeros((n_blocks, block_len, K, Dh), dt),
         pos=jnp.full((n_blocks, block_len), -1, jnp.int32),
+        k_scale=scale(), v_scale=scale(),
     )
 
 
-def paged_view(pool: KVCache, table: Array) -> KVCache:
+def paged_view(pool: KVCache, table: Array,
+               view_dtype: Any = jnp.bfloat16) -> KVCache:
     """Gather a slot-linear ``(B, nb*L, ...)`` view of the pool through the
     block table.  With the same writes applied, the view is elementwise
     equal to the monolithic cache of length nb*L — which is what makes the
     whole paged serving path bitwise-identical to the monolithic one.
     Sentinel (out-of-range) table entries clip to the last pool block:
-    garbage reads that only ever feed an empty serve slot's own row."""
+    garbage reads that only ever feed an empty serve slot's own row.
+
+    A quantized pool gathers its scales alongside and dequantizes HERE, so
+    the view is always a plain ``cfg``-dtype monolithic cache — this is the
+    gathered-view parity oracle for the fused-dequant decode paths, and the
+    only place pool rows are materialised dequantized."""
     B, nb = table.shape
     L = pool.k.shape[1]
     flat = table.reshape(-1)
     k = jnp.take(pool.k, flat, axis=0, mode="clip")
     v = jnp.take(pool.v, flat, axis=0, mode="clip")
     pos = jnp.take(pool.pos, flat, axis=0, mode="clip")
-    return KVCache(k=k.reshape(B, nb * L, *pool.k.shape[2:]),
-                   v=v.reshape(B, nb * L, *pool.v.shape[2:]),
+    if pool.k_scale is not None:
+        k = Q.dequantize_rows(k, jnp.take(pool.k_scale, flat, axis=0,
+                                          mode="clip"), view_dtype)
+        v = Q.dequantize_rows(v, jnp.take(pool.v_scale, flat, axis=0,
+                                          mode="clip"), view_dtype)
+    return KVCache(k=k.reshape(B, nb * L, *k.shape[2:]),
+                   v=v.reshape(B, nb * L, *v.shape[2:]),
                    pos=pos.reshape(B, nb * L))
 
 
@@ -492,7 +539,21 @@ def paged_scatter_blocks(pool: KVCache, table: Array, lin: KVCache,
     kb = lin.k.reshape(B * nb, L, *lin.k.shape[2:])
     vb = lin.v.reshape(B * nb, L, *lin.v.shape[2:])
     pb = lin.pos.reshape(B * nb, L)
-    return KVCache(
+    if pool.k_scale is not None:
+        # quantize-at-scatter: per-row scales over the written (covering)
+        # blocks only; untouched blocks — shared COW prefixes included —
+        # keep their existing q/scale pairs byte-for-byte.
+        quant = "int8" if pool.k.dtype == jnp.int8 else "fp8"
+        kb, ks = Q.quantize_rows(kb, quant)
+        vb, vs = Q.quantize_rows(vb, quant)
+        return pool._replace(
+            k=pool.k.at[dst].set(kb, mode="drop"),
+            v=pool.v.at[dst].set(vb, mode="drop"),
+            pos=pool.pos.at[dst].set(pb, mode="drop"),
+            k_scale=pool.k_scale.at[dst].set(ks, mode="drop"),
+            v_scale=pool.v_scale.at[dst].set(vs, mode="drop"),
+        )
+    return pool._replace(
         k=pool.k.at[dst].set(kb.astype(pool.k.dtype), mode="drop"),
         v=pool.v.at[dst].set(vb.astype(pool.v.dtype), mode="drop"),
         pos=pool.pos.at[dst].set(pb, mode="drop"),
@@ -528,13 +589,36 @@ def paged_scatter_delta(pool: KVCache, table: Array, delta: KVCache,
     kf = pool.k.reshape(N * L, *pool.k.shape[2:])
     vf = pool.v.reshape(N * L, *pool.v.shape[2:])
     pf = pool.pos.reshape(N * L)
+    if pool.k_scale is not None:
+        # the delta buffer stays bf16 (O(B*steps), not worth shrinking);
+        # quantize its rows here so the dispatch boundary — not the write
+        # path — decides the pool representation, same per-row function the
+        # gathered path's paged_scatter_blocks applies to the same rows.
+        quant = "int8" if pool.k.dtype == jnp.int8 else "fp8"
+        k, ks = Q.quantize_rows(k, quant)
+        v, vs = Q.quantize_rows(v, quant)
+        ksf = pool.k_scale.reshape(N * L, *pool.k_scale.shape[2:])
+        vsf = pool.v_scale.reshape(N * L, *pool.v_scale.shape[2:])
+        ksf = ksf.at[flat].set(ks.reshape(B * steps, *ks.shape[2:]),
+                               mode="drop")
+        vsf = vsf.at[flat].set(vs.reshape(B * steps, *vs.shape[2:]),
+                               mode="drop")
+        kf = kf.at[flat].set(k.reshape(B * steps, *k.shape[2:]), mode="drop")
+        vf = vf.at[flat].set(v.reshape(B * steps, *v.shape[2:]), mode="drop")
+        pf = pf.at[flat].set(pos.reshape(-1), mode="drop")
+        return pool._replace(
+            k=kf.reshape(pool.k.shape), v=vf.reshape(pool.v.shape),
+            pos=pf.reshape(pool.pos.shape),
+            k_scale=ksf.reshape(pool.k_scale.shape),
+            v_scale=vsf.reshape(pool.v_scale.shape))
     kf = kf.at[flat].set(k.reshape(B * steps, *k.shape[2:]).astype(kf.dtype),
                          mode="drop")
     vf = vf.at[flat].set(v.reshape(B * steps, *v.shape[2:]).astype(vf.dtype),
                          mode="drop")
     pf = pf.at[flat].set(pos.reshape(-1), mode="drop")
-    return KVCache(k=kf.reshape(pool.k.shape), v=vf.reshape(pool.v.shape),
-                   pos=pf.reshape(pool.pos.shape))
+    return pool._replace(k=kf.reshape(pool.k.shape),
+                         v=vf.reshape(pool.v.shape),
+                         pos=pf.reshape(pool.pos.shape))
 
 
 def init_decode_delta(cfg: ModelConfig, batch: int, steps: int) -> KVCache:
@@ -576,18 +660,32 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
     layer index: the gathers fold ``layer * N`` into their block ids
     instead of slicing a per-layer pool (which would copy the whole pool
     every decode step).
+
+    Quantized pools (``pool.k_scale`` set) stream RAW int8/fp8 rows plus
+    their per-row scale chunks and fuse the dequant into the accumulator
+    (``_decode_stream_chunk``); the delta buffer stays bf16 and overlays
+    with a unit scale.  Quantized-vs-gathered parity is budgeted, not
+    bitwise: the fused path scales f32 scores where the oracle dequantizes
+    rows to bf16 before the dot (see docs/RUNTIME.md "Quantized caches").
     """
     B = x.shape[0]
     stacked = layer is not None
+    quantized = pool.k_scale is not None
+    ksp = vsp = None
     if stacked:
         R, N, L = pool.k.shape[0], pool.k.shape[1], pool.k.shape[2]
         kp = pool.k.reshape((R * N,) + pool.k.shape[2:])
         vp = pool.v.reshape((R * N,) + pool.v.shape[2:])
         pp = pool.pos.reshape(R * N, L)
+        if quantized:
+            ksp = pool.k_scale.reshape((R * N,) + pool.k_scale.shape[2:])
+            vsp = pool.v_scale.reshape((R * N,) + pool.v_scale.shape[2:])
         base = layer * N
     else:
         R, (N, L) = 1, (pool.k.shape[0], pool.k.shape[1])
         kp, vp, pp = pool.k, pool.v, pool.pos
+        if quantized:
+            ksp, vsp = pool.k_scale, pool.v_scale
         base = 0
     nb = table.shape[1]
     Tl = nb * L
@@ -614,7 +712,8 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
         out = paged_decode_attention(
             qr, kp, vp, pp, tbl, index,
             window=cfg.window if local else None,
-            delta_k=delta.k, delta_v=delta.v, delta_pos=delta.pos, p0=p0)
+            delta_k=delta.k, delta_v=delta.v, delta_pos=delta.pos, p0=p0,
+            k_scale=ksp, v_scale=vsp)
         out = constrain(out.reshape(B, 1, cfg.num_heads, Dh),
                         ("act_batch", None, "act_heads", "act_head_dim"),
                         mesh, rules)
@@ -624,6 +723,9 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
         kp_flat = kp.reshape(R * N * L, K, Dh)
         vp_flat = vp.reshape(R * N * L, K, Dh)
         pp_flat = pp.reshape(R * N * L)
+        if quantized:
+            ksp_flat = ksp.reshape(R * N * L, K)
+            vsp_flat = vsp.reshape(R * N * L, K)
         # gather each chunk at BLOCK granularity when the chunk is
         # block-aligned (whole (L, K, Dh) rows, same access pattern as
         # paged_view's one-shot gather — ~2x over a per-slot row gather on
@@ -632,6 +734,7 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
         block_granular = cb % L == 0
 
         def step(carry, xs_c):
+            k_s = v_s = None
             if block_granular:
                 blks = xs_c                       # (cb // L,) chunk's blocks
                 sl = (blks[:, None] * L
@@ -641,6 +744,9 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
                 k_c = jnp.take(kp, tb, axis=0).reshape(B, cb, K, Dh)
                 v_c = jnp.take(vp, tb, axis=0).reshape(B, cb, K, Dh)
                 p_c = jnp.take(pp, tb, axis=0).reshape(B, cb)
+                if quantized:
+                    k_s = jnp.take(ksp, tb, axis=0).reshape(B, cb, K)
+                    v_s = jnp.take(vsp, tb, axis=0).reshape(B, cb, K)
             else:
                 sl = xs_c                         # (cb,) this chunk's slots
                 blk = (jnp.minimum(jnp.take(table, sl // L, axis=1), N - 1)
@@ -649,6 +755,15 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
                 k_c = jnp.take(kp_flat, flat, axis=0)        # (B, cb, K, Dh)
                 v_c = jnp.take(vp_flat, flat, axis=0)
                 p_c = jnp.take(pp_flat, flat, axis=0)        # (B, cb)
+                if quantized:
+                    k_s = jnp.take(ksp_flat, flat, axis=0)   # (B, cb, K)
+                    v_s = jnp.take(vsp_flat, flat, axis=0)
+            if quantized:
+                # raw quantized rows cast to the compute dtype (int8/fp8
+                # values are exact in bf16); the scales ride as separate
+                # chunk operands and are applied inside the accumulator
+                k_c = k_c.astype(cfg.comp_dtype)
+                v_c = v_c.astype(cfg.comp_dtype)
             # overlay this dispatch's own writes: latest delta row per slot.
             # The index math is cheap (B, cb) ints; the gathers + full-width
             # wheres are ~2x the chunk's own traffic, so they run under a
@@ -661,21 +776,30 @@ def attn_decode_paged(p: dict, x: Array, pool: KVCache, table: Array,
             valid = (d >= 0) & (d <= t)
 
             def overlay(args):
-                k_c, v_c, p_c = args
+                k_c, v_c, p_c, k_s, v_s = args
                 dc = jnp.clip(d, 0, steps - 1)
                 k_d = jnp.take_along_axis(delta.k, dc[..., None, None],
                                           axis=1)
                 v_d = jnp.take_along_axis(delta.v, dc[..., None, None],
                                           axis=1)
                 p_d = jnp.take_along_axis(delta.pos, dc, axis=1)
-                return (jnp.where(valid[..., None, None], k_d, k_c),
-                        jnp.where(valid[..., None, None], v_d, v_c),
-                        jnp.where(valid, p_d, p_c))
+                if quantized:
+                    # delta rows are real bf16 values: overlay them verbatim
+                    # and neutralise the slot's scale to 1 — the fused
+                    # dequant then leaves them untouched
+                    k_s = jnp.where(valid[..., None], 1.0, k_s)
+                    v_s = jnp.where(valid[..., None], 1.0, v_s)
+                return (jnp.where(valid[..., None, None],
+                                  k_d.astype(k_c.dtype), k_c),
+                        jnp.where(valid[..., None, None],
+                                  v_d.astype(v_c.dtype), v_c),
+                        jnp.where(valid, p_d, p_c), k_s, v_s)
 
-            k_c, v_c, p_c = jax.lax.cond(valid.any(), overlay, lambda a: a,
-                                         (k_c, v_c, p_c))
+            k_c, v_c, p_c, k_s, v_s = jax.lax.cond(
+                valid.any(), overlay, lambda a: a,
+                (k_c, v_c, p_c, k_s, v_s))
             return _decode_stream_chunk(carry, qr, k_c, v_c, p_c, index,
-                                        cfg, local), None
+                                        cfg, local, k_s, v_s), None
 
         xs = (jnp.arange(nb, dtype=jnp.int32).reshape(nc, cb // L)
               if block_granular

@@ -80,7 +80,7 @@ def merge(params: dict, lora: dict, scale: float = 1.0,
                 if lsub is not None:
                     d = _delta(lsub["a"], lsub["b"], _TARGETS[k])
                     base = (base.astype(jnp.float32)
-                            + scale * d.astype(jnp.float32)).astype(v.dtype)
+                            + scale * d.astype(jnp.float32)).astype(v.dtype)  # swarmlint: ignore[quant-scale-drift] `scale` is the LoRA merge strength, not a quant scale; one-time f32 param merge, no cache-shaped data
                 out[k] = base
         return out
     return walk(params, lora)

@@ -47,6 +47,7 @@ except ImportError:                     # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.distributed.sharding import constrain
+from repro.models import quant as Q
 from repro.models.common import (ACTIVATIONS, ModelConfig, ParamDef, norm_def,
                                  normal_init, rmsnorm)
 from repro.models.ffn import _mlp_body, mlp_defs
@@ -328,6 +329,16 @@ def moe_prefill_block(p: dict, x: Array, cfg: ModelConfig, positions: Array,
     return x + y.astype(x.dtype), aux
 
 
+def _take_expert_rows(w, idx, dt):
+    """Gather the k selected experts' weight rows.  Quantized weights
+    (``quant.QTensor``) gather payload *and* scale rows and dequantize
+    after the gather, so weight traffic stays k/E bytes as well as
+    k/E FLOPs."""
+    if isinstance(w, Q.QTensor):
+        return w.take_rows(idx, dt)
+    return jnp.take(w, idx, axis=0).astype(dt)
+
+
 def moe_decode_block(p: dict, x: Array, cfg: ModelConfig, *,
                      mesh=None, rules=None) -> tuple[Array, Array]:
     """Constant-shape exact top-k dispatch for the decode step.
@@ -363,11 +374,11 @@ def moe_decode_block(p: dict, x: Array, cfg: ModelConfig, *,
 
     dt = h.dtype
     wk = ("act_batch", "act_topk", None, "act_expert_ffn")
-    wg = constrain(jnp.take(p["w_gate"], idx, axis=0).astype(dt),
+    wg = constrain(_take_expert_rows(p["w_gate"], idx, dt),
                    wk, mesh, rules)                        # (T,k,D,Fe)
-    wu = constrain(jnp.take(p["w_up"], idx, axis=0).astype(dt),
+    wu = constrain(_take_expert_rows(p["w_up"], idx, dt),
                    wk, mesh, rules)
-    wd = constrain(jnp.take(p["w_down"], idx, axis=0).astype(dt),
+    wd = constrain(_take_expert_rows(p["w_down"], idx, dt),
                    ("act_batch", "act_topk", "act_expert_ffn", None),
                    mesh, rules)                            # (T,k,Fe,D)
 

@@ -1,0 +1,162 @@
+"""Quantized storage for serving: per-row scaled int8/fp8 tensors.
+
+Two consumers share the same scheme:
+
+* **KV block pools** (``cache_quant``): each cache row — one (slot,
+  kv-head) pair, ``head_dim`` wide — is stored as int8 / float8_e4m3fn
+  plus one float32 scale, computed as ``amax(row) / qmax``.  Scales
+  live alongside the pool as a parallel pytree leaf (``KVCache.k_scale``
+  / ``.v_scale``); the decode paths never materialise the dequantized
+  pool — they fold the k-scale into the post-QK scores and the v-scale
+  into the softmax weights inside the accumulator (see
+  ``attention._decode_stream_chunk`` and ``kernels/decode_attention``).
+* **Serving weights** (``weight_quant``): matmul weights are stored as
+  a :class:`QTensor` — quantized payload + per-row f32 scale — whose
+  ``.astype`` dequantizes on the fly, so every ``p["w"].astype(dt)``
+  call site works unchanged.  Per-last-dim row scaling follows the
+  quantized-EMA bookkeeping idiom (olmax ``optimizer.py``).
+
+Quantizing a freshly-zeroed row yields ``(0, scale=0)`` and
+dequantizing with a zero scale yields zeros, so reset blocks and
+quantize(scatter) agree without special cases.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# max representable magnitude per storage format: int8 symmetric
+# (+-127, -128 unused), float8 e4m3fn (+-448, the largest normal)
+QMAX = {"int8": 127.0, "fp8": 448.0}
+CACHE_QUANTS = (None, "int8", "fp8")
+
+
+def qdtype(quant: str):
+    """Storage dtype for a quantization mode name."""
+    if quant == "int8":
+        return jnp.int8
+    if quant == "fp8":
+        return jnp.float8_e4m3fn
+    raise ValueError(f"unknown quantization mode {quant!r}; "
+                     f"expected one of {CACHE_QUANTS[1:]}")
+
+
+def check_quant(quant):
+    if quant not in CACHE_QUANTS:
+        raise ValueError(f"unknown quantization mode {quant!r}; "
+                         f"expected one of {CACHE_QUANTS}")
+    return quant
+
+
+def quantize_rows(x, quant: str):
+    """``x (..., D) -> (q (..., D), scale (...))``: symmetric per-row
+    quantization with the scale over the trailing dim, in f32."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = (amax / QMAX[quant]).astype(jnp.float32)
+    y = x.astype(jnp.float32) / jnp.where(scale > 0, scale, 1.0)[..., None]
+    if quant == "int8":
+        q = jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = y.astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def dequantize_rows(q, scale, dtype):
+    """Materialised per-row dequant — the gathered-view oracle path.
+
+    The fused decode paths do NOT call this on pool-shaped values; they
+    apply the scale inside the softmax accumulator instead.  ``dtype``
+    is the cache/compute dtype (bf16), never f32 (see the swarmlint
+    ``quant-scale-drift`` rule)."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)  # swarmlint: ignore[quant-scale-drift] the one sanctioned dequant helper; callers pass the cache dtype and the rule polices them
+
+
+# ---------------------------------------------------------------------------
+# weight storage
+
+
+class QTensor(NamedTuple):
+    """Quantized weight + per-row (trailing-dim) f32 scale.
+
+    A NamedTuple is a native pytree, so QTensor leaves flow through
+    ``device_put`` / scan stacking / ``jax.tree`` ops transparently;
+    ``.astype(dt)`` dequantizes at the matmul call sites."""
+    q: Any
+    scale: Any
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    def astype(self, dtype):
+        return dequantize_rows(self.q, self.scale, dtype)
+
+    def take_rows(self, idx, dtype):
+        """Gather leading-dim rows quantized, dequantize AFTER the
+        gather — k/E bytes for the MoE gather-decode variant."""
+        return dequantize_rows(jnp.take(self.q, idx, axis=0),
+                               jnp.take(self.scale, idx, axis=0), dtype)
+
+
+def quantize_tensor(w, quant: str) -> QTensor:
+    return QTensor(*quantize_rows(w, quant))
+
+
+# matmul weights worth quantizing.  Deliberately absent: embed / norms /
+# biases (tiny, numerically load-bearing), router logits (routing flips
+# are catastrophic vs a few mantissa bits saved), and every recurrent
+# mixer weight (rg-lru / ssd recurrences compound per-step error — same
+# reason their state rows stay bf16 in the cache pool).
+_QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo",                  # attention projections
+    "w_up", "w_down", "w_gate",              # dense + expert MLPs
+    "lm_head",                               # untied output head
+})
+
+
+def _quantize_subtree(tree, quant: str):
+    if isinstance(tree, dict):
+        return {k: (quantize_tensor(v, quant)
+                    if k in _QUANT_KEYS and not isinstance(v, dict)
+                    else _quantize_subtree(v, quant))
+                for k, v in tree.items()}
+    return tree
+
+
+def quantize_params(params, quant: str):
+    """Quantize the serving weights (attention/MLP/MoE matmuls + the
+    untied lm_head) to ``quant`` storage; everything else passes
+    through untouched.  Works on stacked (scan-over-layers) stages —
+    the leading repeat dim just becomes part of the row batch."""
+    check_quant(quant)
+    out = dict(params)
+    out["stages"] = [_quantize_subtree(sc, quant) for sc in params["stages"]]
+    if "lm_head" in out:
+        out["lm_head"] = quantize_tensor(out["lm_head"], quant)
+    return out
+
+
+def quantize_param_axes(axes, params):
+    """Mirror ``quantize_params`` over a logical-axes tree so sharding
+    specs stay structurally parallel: a QTensor param leaf gets
+    ``QTensor(q=<orig axes>, scale=<orig axes minus trailing dim>)``."""
+    def walk(a, p):
+        if isinstance(p, QTensor):
+            return QTensor(q=a, scale=a[:-1])
+        if isinstance(p, dict):
+            return {k: walk(a[k], v) for k, v in p.items()}
+        if isinstance(p, (list, tuple)) and not _is_axes_leaf(p):
+            return type(p)(walk(ae, pe) for ae, pe in zip(a, p))
+        return a
+
+    def _is_axes_leaf(x):
+        return isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+
+    return walk(axes, params)

@@ -327,7 +327,8 @@ def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
 
     from repro.distributed.sharding import DEFAULT_RULES, spec_for
     rules = rules or DEFAULT_RULES
-    axes = paged_cache_axes(cfg) if is_paged(cache) else cache_axes(cfg)
+    axes = (paged_cache_axes(cfg, quantized=cache_is_quantized(cache))
+            if is_paged(cache) else cache_axes(cfg))
 
     def one(leaf, ax):
         spec = spec_for(leaf.shape, ax, mesh, rules.act_rules)
@@ -342,6 +343,18 @@ def constrain_cache(cache: list, cfg: ModelConfig, mesh=None,
 def is_paged(cache) -> bool:
     """True for the paged cache pytree ``{"layers", "table", "rows"}``."""
     return isinstance(cache, dict)
+
+
+def cache_is_quantized(cache) -> bool:
+    """True when a paged cache's KV pools carry scale sidecar leaves.
+
+    Structural (``is not None``), so it is trace-safe: quantization is part
+    of the pytree structure, never a runtime value."""
+    for sc in cache["layers"]:
+        for c in sc.values():
+            if c.kv is not None:
+                return c.kv.k_scale is not None
+    return False
 
 
 def paged_cache(layers: list, table: Array, rows: Array) -> dict:
@@ -441,19 +454,23 @@ def grow_cache(cfg: ModelConfig, cache: list, batch: int, new_len: int
 # ---------------------------------------------------------------------------
 
 def init_block_pool(cfg: ModelConfig, n_blocks: int, block_len: int,
-                    n_rows: int) -> list:
+                    n_rows: int, cache_quant: str | None = None) -> list:
     """Pool arrays for the paged cache, structure parallel to
     ``init_cache``: attention layers hold ``(n_blocks, block_len, ...)`` KV
     blocks, recurrent/conv layers hold ``(n_rows, ...)`` state rows (the
     same leaves as a batch-``n_rows`` monolithic state — rows are just
-    pooled batch slots addressed by id)."""
+    pooled batch slots addressed by id).  ``cache_quant`` stores the KV
+    blocks int8/fp8 with per-row f32 scale leaves riding alongside;
+    recurrent/conv state rows ALWAYS stay bf16 — compounding recurrences
+    drift under requantization (the same reason their f32 accumulator
+    sites carry dtype-drift pragmas)."""
     pools = []
     for stage in cfg.stage_plan():
         sc = {}
         for i, (mixer, _) in enumerate(stage.blocks):
             if mixer in ("attn", "attn_local"):
                 c = LayerCache(kv=attention.init_paged_kv(
-                    cfg, n_blocks, block_len))
+                    cfg, n_blocks, block_len, cache_quant))
             elif mixer == "rglru":
                 c = LayerCache(rg=rglru.init_rglru_state(cfg, n_rows))
             elif mixer == "ssd":
@@ -466,13 +483,18 @@ def init_block_pool(cfg: ModelConfig, n_blocks: int, block_len: int,
     return pools
 
 
-def paged_cache_axes(cfg: ModelConfig) -> dict:
+def paged_cache_axes(cfg: ModelConfig, quantized: bool = False) -> dict:
     """Logical-axis tree parallel to ``paged_cache(init_block_pool(...))``:
     the pool block/row dim shards over 'data' (``act_pool`` rule), block
-    tables and row ids ride with the batch."""
+    tables and row ids ride with the batch.  ``quantized`` adds the scale
+    sidecar leaves (``act_pool_scale`` rule — same 'data' chain over the
+    block dim) so the axes tree stays structurally parallel to a
+    ``cache_quant`` pool."""
+    scale = attention.PAGED_SCALE_AXES if quantized else None
     kv = attention.KVCache(k=attention.PAGED_KV_AXES,
                            v=attention.PAGED_KV_AXES,
-                           pos=("act_pool", None))
+                           pos=("act_pool", None),
+                           k_scale=scale, v_scale=scale)
     rg = rglru.RGLRUState(h=("act_pool", "act_ssm_inner"),
                           conv=("act_pool", None, "act_ssm_inner"))
     sd = ssm.SSMState(ssd=("act_pool", "act_heads", None, None),
@@ -529,9 +551,14 @@ def paged_gather(cfg: ModelConfig, cache: dict) -> list:
             if c.kv is not None:
                 L = c.kv.k.shape[2 if stacked else 1]
                 tbl = table[:, :_local_nb(cfg, nb, L, mixer)]
-                view = (jax.vmap(attention.paged_view, in_axes=(0, None))
-                        (c.kv, tbl) if stacked
-                        else attention.paged_view(c.kv, tbl))
+
+                def pv(kv, tb):
+                    # quantized pools dequantize inside paged_view, so the
+                    # gathered view is ALWAYS a plain cfg-dtype monolithic
+                    # cache and the compute bodies below never see scales
+                    return attention.paged_view(kv, tb, cfg.dtype)
+                view = (jax.vmap(pv, in_axes=(0, None))(c.kv, tbl)
+                        if stacked else pv(c.kv, tbl))
                 c = LayerCache(kv=view)
             else:
                 axis = 1 if stacked else 0
@@ -611,16 +638,21 @@ def _map_state_pools(cfg: ModelConfig, layers: list, fn) -> list:
 
 def reset_blocks(cfg: ModelConfig, layers: list, ids: Array) -> list:
     """Re-initialise pool blocks ``ids`` (n,) in every KV pool: k/v zeroed,
-    pos = -1.  O(len(ids)) — this replaces ``grow_cache``'s whole-buffer
-    copy for paged session growth.  State rows are untouched."""
+    pos = -1 (quantized pools also zero the blocks' scale rows — exactly
+    what quantizing a zero row scatters, see ``quant.quantize_rows``).
+    O(len(ids)) — this replaces ``grow_cache``'s whole-buffer copy for
+    paged session growth.  State rows are untouched."""
     def one(kv, stacked):
-        if stacked:
-            return attention.KVCache(k=kv.k.at[:, ids].set(0),
-                                     v=kv.v.at[:, ids].set(0),
-                                     pos=kv.pos.at[:, ids].set(-1))
-        return attention.KVCache(k=kv.k.at[ids].set(0),
-                                 v=kv.v.at[ids].set(0),
-                                 pos=kv.pos.at[ids].set(-1))
+        # leaf -> same leaf with blocks ``ids`` set to ``val``; every KV
+        # pool leaf (k/v/pos/scales) has the block dim first (or second
+        # when repeat-stacked)
+        def z(a, val):
+            return a.at[:, ids].set(val) if stacked else a.at[ids].set(val)
+        kv = kv._replace(k=z(kv.k, 0), v=z(kv.v, 0), pos=z(kv.pos, -1))
+        if kv.k_scale is not None:
+            kv = kv._replace(k_scale=z(kv.k_scale, 0),
+                             v_scale=z(kv.v_scale, 0))
+        return kv
     return _map_kv_pools(cfg, layers, one)
 
 
@@ -628,15 +660,16 @@ def copy_blocks(cfg: ModelConfig, layers: list, src: Array,
                 dst: Array) -> list:
     """Copy pool blocks ``src`` -> ``dst`` in every KV pool (the COW copy:
     O(blocks copied), at most the one partially filled tail block per
-    diverging slot)."""
+    diverging slot).  Scale sidecar leaves copy with their blocks — COW
+    and prefix sharing never requantize."""
     def one(kv, stacked):
-        if stacked:
-            return attention.KVCache(k=kv.k.at[:, dst].set(kv.k[:, src]),
-                                     v=kv.v.at[:, dst].set(kv.v[:, src]),
-                                     pos=kv.pos.at[:, dst].set(kv.pos[:, src]))
-        return attention.KVCache(k=kv.k.at[dst].set(kv.k[src]),
-                                 v=kv.v.at[dst].set(kv.v[src]),
-                                 pos=kv.pos.at[dst].set(kv.pos[src]))
+        def cp(a):
+            return (a.at[:, dst].set(a[:, src]) if stacked
+                    else a.at[dst].set(a[src]))
+        kv = kv._replace(k=cp(kv.k), v=cp(kv.v), pos=cp(kv.pos))
+        if kv.k_scale is not None:
+            kv = kv._replace(k_scale=cp(kv.k_scale), v_scale=cp(kv.v_scale))
+        return kv
     return _map_kv_pools(cfg, layers, one)
 
 

@@ -56,6 +56,13 @@ class EvictedSessionError(ValueError):
     """A paged session handle was used after release / TTL eviction."""
 
 
+class QuantMismatchError(ValueError):
+    """A session checkpoint's cache representation does not match the
+    restoring engine's (``cache_quant`` differs, or a quantized paged
+    checkpoint meets a monolithic engine).  Raised instead of silently
+    changing the session's numeric precision mid-conversation."""
+
+
 @dataclasses.dataclass
 class PagedHandle:
     """A session's view into a :class:`CachePool`.
@@ -95,11 +102,14 @@ class CachePool:
     """
 
     def __init__(self, cfg, block_len: int, n_blocks: int, n_rows: int, *,
+                 cache_quant: str | None = None,
                  mesh=None, rules=None, clock=time.monotonic):
+        from repro.models import quant as Q
         self.cfg = cfg
         self.block_len = int(block_len)
         self.n_blocks = int(n_blocks)
         self.n_rows = int(n_rows)
+        self.cache_quant = Q.check_quant(cache_quant)
         self.mesh, self.rules = mesh, rules
         self._clock = clock
         # local-attention layers view the FIRST ring_blocks table entries
@@ -112,11 +122,15 @@ class CachePool:
         if cfg.window is not None and any(
                 m == "attn_local" for m, _ in cfg.layer_plan()):
             self.ring_blocks = max(cfg.window // block_len, 1)
-        arrays = T.init_block_pool(cfg, n_blocks, block_len, n_rows)
+        arrays = T.init_block_pool(cfg, n_blocks, block_len, n_rows,
+                                   cache_quant=cache_quant)
         if mesh is not None:
             rules = rules or sh.SERVE_RULES
-            specs = sh.tree_specs(arrays, T.paged_cache_axes(cfg)["layers"],
-                                  mesh, rules.act_rules)
+            specs = sh.tree_specs(
+                arrays,
+                T.paged_cache_axes(
+                    cfg, quantized=cache_quant is not None)["layers"],
+                mesh, rules.act_rules)
             arrays = jax.device_put(arrays, jax.tree.map(
                 lambda s: jax.sharding.NamedSharding(mesh, s), specs))
         else:
@@ -161,6 +175,32 @@ class CachePool:
     def blocks_in_use(self) -> int:
         return self.n_blocks - len(self._free)
 
+    @property
+    def block_bytes(self) -> int:
+        """Device bytes per pool block across all attention layers, in the
+        pool's STORED representation — quantized payload plus f32 scale
+        sidecar for ``cache_quant`` pools, so famine messages and the
+        session-density benchmark report real headroom, not the bf16
+        equivalent."""
+        kv = sum(leaf.nbytes
+                 for sc in self.arrays for c in sc.values()
+                 if c.kv is not None for leaf in c.kv if leaf is not None)
+        return kv // self.n_blocks
+
+    @property
+    def pool_bytes(self) -> int:
+        """Total device bytes of the KV block pool (stored representation)."""
+        return self.block_bytes * self.n_blocks
+
+    @property
+    def quant_label(self) -> str:
+        return self.cache_quant or "bf16"
+
+    def _famine_detail(self) -> str:
+        return (f"{self.quant_label} blocks of "
+                f"{self.block_bytes / 1024:.1f} KiB, pool "
+                f"{self.pool_bytes / 2**20:.1f} MiB")
+
     def can_alloc(self, n_blocks: int, n_rows: int = 0) -> bool:
         return (len(self._free) >= n_blocks
                 and len(self._free_rows) >= n_rows)
@@ -172,7 +212,8 @@ class CachePool:
         if len(self._free) < n:
             raise PoolExhaustedError(
                 f"cache pool exhausted: need {n} blocks, "
-                f"{len(self._free)}/{self.n_blocks} free — grow pool_blocks, "
+                f"{len(self._free)}/{self.n_blocks} free "
+                f"({self._famine_detail()}) — grow pool_blocks, "
                 "release sessions, or enable TTL eviction")
         ids = np.array([self._heapq.heappop(self._free) for _ in range(n)],
                        np.int32)

@@ -539,6 +539,17 @@ class InferenceEngine:
     # the in-place read wins on both CPU and TPU — see benchmarks/
     # decode_microbench.py).
     attn_decode_impl: str | None = None
+    # quantized serving (docs/RUNTIME.md "Quantized caches"):
+    # ``cache_quant`` stores the paged pool's KV blocks int8/fp8 with
+    # per-row f32 scales (requires paged=True; recurrent state rows stay
+    # bf16) — correctness becomes *budgeted*: greedy tokens match bf16 on
+    # the smoke workloads and logit error stays within the per-arch
+    # budget, instead of bitwise.  ``weight_quant`` stores the serving
+    # matmul weights (attention/MLP/MoE projections + untied lm_head) as
+    # QTensors, dequantized on the fly at the matmul call sites; works on
+    # monolithic and paged engines, on- and off-mesh.
+    cache_quant: str | None = None
+    weight_quant: str | None = None
     # persistent compilation cache: set to a directory to make every jit
     # this engine triggers write/read XLA executables there — a second
     # process constructing the same engine performs ZERO fresh compiles
@@ -580,6 +591,16 @@ class InferenceEngine:
             self.max_len = -(-self.max_len // kvb) * kvb
         self._recurrent = any(m in ("rglru", "ssd")
                               for m, _ in self.cfg.layer_plan())
+        from repro.models import quant as Q
+        Q.check_quant(self.cache_quant)
+        Q.check_quant(self.weight_quant)
+        if self.cache_quant is not None and not self.paged:
+            raise ValueError(
+                "cache_quant requires paged=True: quantization is per pool "
+                "block (scales ride the block pool as a sidecar leaf); the "
+                "monolithic cache stays bf16")
+        if self.weight_quant is not None:
+            self.params = Q.quantize_params(self.params, self.weight_quant)
         self.pool = None
         if self.paged:
             L = self.block_len
@@ -607,14 +628,20 @@ class InferenceEngine:
             self.rules = self.rules or (sh.SERVE_RULES
                                         if self.mesh is not None else None)
             self.pool = CachePool(self.cfg, L, n_blocks, n_rows,
+                                  cache_quant=self.cache_quant,
                                   mesh=self.mesh, rules=self.rules)
         if self.mesh is None:
             return
         self.rules = self.rules or sh.SERVE_RULES
         # explicit parameter placement: the logical-axis rules decide which
-        # dims shard ('heads'/'ffn'/'vocab' over 'model'); the rest replicate
+        # dims shard ('heads'/'ffn'/'vocab' over 'model'); the rest replicate.
+        # Quantized weights mirror the axes tree over the QTensor leaves so
+        # each payload row and its scale land on the same shard.
+        axes = T.param_axes(self.cfg)
+        if self.weight_quant is not None:
+            axes = Q.quantize_param_axes(axes, self.params)
         self._param_sh = sh.tree_shardings(
-            self.params, T.param_axes(self.cfg), self.mesh, self.rules)
+            self.params, axes, self.mesh, self.rules)
         self.params = jax.device_put(self.params, self._param_sh)
 
     # ------------------------------------------------------------------
@@ -870,7 +897,14 @@ class InferenceEngine:
         extra = {"kind": "session", "batch": int(state.batch),
                  "max_len": int(state.max_len), "offset": int(state.offset),
                  "cov_len": cov_len, "exact": bool(state.exact),
-                 "paged": bool(self.paged), "has_rng": state.rng is not None}
+                 "paged": bool(self.paged), "has_rng": state.rng is not None,
+                 # the saved linear view was dequantized by paged_gather, so
+                 # the shards are always bf16 — but a quantized session's
+                 # numerics are budgeted, not bitwise, and restoring it into
+                 # a differently-represented cache would silently change the
+                 # conversation's precision; record the representation so
+                 # restore can refuse a mismatch (QuantMismatchError)
+                 "cache_quant": self.cache_quant}
         return ck.save(ckpt_dir, step, tree, extra=extra, keep=keep)
 
     def restore_session(self, ckpt_dir: str,
@@ -896,6 +930,17 @@ class InferenceEngine:
         if extra.get("kind") != "session":
             raise ValueError(f"checkpoint at {ckpt_dir!r} step {step} is "
                              "not a session checkpoint")
+        saved_q = extra.get("cache_quant")   # absent in old checkpoints
+        if saved_q != self.cache_quant:
+            from repro.serving.cache_manager import QuantMismatchError
+            raise QuantMismatchError(
+                f"session checkpoint at {ckpt_dir!r} step {step} was saved "
+                f"from a cache_quant={saved_q!r} engine but this engine is "
+                f"cache_quant={self.cache_quant!r}"
+                + ("" if self.paged else " (monolithic)")
+                + "; restoring would silently change the session's numeric "
+                "precision — restore on a matching engine or re-absorb the "
+                "conversation")
         B, cov_len = int(extra["batch"]), int(extra["cov_len"])
         ab_cache = jax.eval_shape(lambda: T.init_cache(self.cfg, B, cov_len))
         ab_leaves, cache_def = jax.tree_util.tree_flatten(ab_cache)
@@ -1565,7 +1610,8 @@ class InferenceEngine:
                         raise PoolExhaustedError(
                             f"cache pool exhausted: "
                             f"{self.pool.blocks_in_use}/"
-                            f"{self.pool.n_blocks} blocks held by "
+                            f"{self.pool.n_blocks} blocks "
+                            f"({self.pool._famine_detail()}) held by "
                             f"{self.pool.live_sessions} sessions and no "
                             "slot can admit — grow pool_blocks, release "
                             "sessions, or pass session_ttl_s")

@@ -224,6 +224,8 @@ class TestPrefixSharing:
                 for c in sc.values():
                     if c.kv is not None:
                         for leaf in c.kv:
+                            if leaf is None:   # scale fields on bf16 pools
+                                continue
                             # k/v are rank 4 (+1 stacked), pos rank 2 (+1)
                             base = (2 if jnp.issubdtype(leaf.dtype,
                                                         jnp.integer) else 4)

@@ -349,6 +349,95 @@ def softmax_stream(x):
 
 
 # ---------------------------------------------------------------------------
+# quant-scale-drift
+
+class TestQuantScaleDrift:
+    def test_flags_narrow_scale_alloc(self, tmp_path):
+        src = """
+import jax.numpy as jnp
+
+def grow_pool(n, L, K):
+    k_scale = jnp.zeros((n, L, K), jnp.bfloat16)
+    return k_scale
+"""
+        fs = _active(_lint(tmp_path, src, relpath="serving/m.py"),
+                     "quant-scale-drift")
+        assert len(fs) == 1 and "float32" in fs[0].message
+
+    def test_flags_scale_cast_narrow(self, tmp_path):
+        src = """
+import jax.numpy as jnp
+
+def pack(pool):
+    return pool.k_scale.astype(jnp.bfloat16)
+"""
+        assert len(_active(_lint(tmp_path, src, relpath="models/m.py"),
+                           "quant-scale-drift")) == 1
+
+    def test_flags_f32_dequantize_rows(self, tmp_path):
+        src = """
+import jax.numpy as jnp
+from repro.models.quant import dequantize_rows
+
+def view(q, scale):
+    return dequantize_rows(q, scale, jnp.float32)
+"""
+        fs = _active(_lint(tmp_path, src, relpath="serving/m.py"),
+                     "quant-scale-drift")
+        assert len(fs) == 1 and "accumulator" in fs[0].message
+
+    def test_flags_manual_f32_dequant_multiply(self, tmp_path):
+        src = """
+import jax.numpy as jnp
+
+def attend(q_rows, k_scale):
+    k = q_rows.astype(jnp.float32) * k_scale[..., None]
+    return k
+"""
+        assert len(_active(_lint(tmp_path, src, relpath="models/m.py"),
+                           "quant-scale-drift")) == 1
+
+    def test_near_miss_accumulator_fused_scale(self, tmp_path):
+        # the sanctioned fused-dequant shape: scores already f32 from
+        # preferred_element_type, scale applied WITHOUT an .astype(f32)
+        src = """
+import jax.numpy as jnp
+
+def stream_chunk(s, k_s, v_s, p):
+    s = s * k_s.transpose(0, 2, 1)[:, :, None, :]
+    p = p * v_s.transpose(0, 2, 1)[:, :, None, :]
+    return s, p
+"""
+        assert _active(_lint(tmp_path, src, relpath="models/m.py"),
+                       "quant-scale-drift") == []
+
+    def test_near_miss_f32_scale_alloc_and_cache_dtype_dequant(self, tmp_path):
+        src = """
+import jax.numpy as jnp
+from repro.models.quant import dequantize_rows
+
+def grow_pool(n, L, K, view_dtype):
+    v_scale = jnp.zeros((n, L, K), jnp.float32)  # swarmlint: ignore[dtype-drift] scales are f32 by contract
+    return v_scale
+
+def view(q, scale, view_dtype):
+    return dequantize_rows(q, scale, view_dtype)
+"""
+        assert _active(_lint(tmp_path, src, relpath="serving/m.py"),
+                       "quant-scale-drift") == []
+
+    def test_near_miss_outside_serving_dirs(self, tmp_path):
+        src = """
+import jax.numpy as jnp
+
+def plot(q, scale):
+    return q.astype(jnp.float32) * scale
+"""
+        assert _active(_lint(tmp_path, src, relpath="benchmarks/b.py"),
+                       "quant-scale-drift") == []
+
+
+# ---------------------------------------------------------------------------
 # pragmas
 
 class TestPragmas:

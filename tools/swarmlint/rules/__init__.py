@@ -7,7 +7,7 @@ from typing import Dict, Iterable, List, Optional
 from ..astutil import SourceFile, iter_py_files
 from ..pragmas import PragmaMap
 from ..report import Finding
-from . import donation, dtype, rng, tracer
+from . import donation, dtype, quant, rng, tracer
 
 # rule-id -> module; a module's check(SourceFile) may emit several ids
 AST_RULE_IDS: Dict[str, object] = {
@@ -17,9 +17,11 @@ AST_RULE_IDS: Dict[str, object] = {
     rng.RULE_KEY: rng,
     tracer.RULE: tracer,
     dtype.RULE: dtype,
+    quant.RULE: quant,
 }
 
-_CHECKERS = (donation.check, rng.check, tracer.check, dtype.check)
+_CHECKERS = (donation.check, rng.check, tracer.check, dtype.check,
+             quant.check)
 
 
 def run_ast_rules(paths: Iterable[str],

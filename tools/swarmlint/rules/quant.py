@@ -1,0 +1,149 @@
+"""``quant-scale-drift`` — quantized-cache scale hygiene.
+
+The quantized serving contract (docs/RUNTIME.md "Quantized caches") has
+two invariants this rule guards:
+
+1. **Scales are float32.**  A per-row scale is one number standing in
+   for 64-128 mantissas; storing it bf16 injects up to 2^-8 relative
+   error into every element of the row and silently widens the
+   quantized-vs-bf16 logit budget.  Any "scale"-named allocation or
+   cast that lands on a non-f32 floating dtype flags.
+2. **Dequantization never materialises f32 cache copies.**  The fused
+   decode paths fold scales into the softmax accumulator (which is
+   already f32); building a dequantized f32 view of pool-shaped data —
+   ``dequantize_rows(..., jnp.float32)``, or a manual
+   ``q.astype(jnp.float32) * scale`` multiply — recreates the memory
+   traffic quantization exists to remove, 4x the quantized bytes.  The
+   gathered-view *oracle* does exactly this on purpose; it carries the
+   pragma with its justification.
+
+Scope: ``models/``, ``serving/`` and ``kernels/`` (the serving data
+path).  Benchmarks and tests may materialise whatever they like.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..astutil import SourceFile, dotted
+from ..report import Finding
+
+RULE = "quant-scale-drift"
+
+APPLY_DIRS = ("models", "serving", "kernels")
+
+_ALLOC_FNS = {"zeros", "ones", "empty", "full", "zeros_like", "full_like"}
+_DTYPE_POS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2,
+              "zeros_like": 1, "full_like": 2}
+_F32_NAMES = {"jnp.float32", "np.float32", "numpy.float32",
+              "jax.numpy.float32"}
+# non-f32 FLOAT dtypes a scale must never take; integer dtypes are left
+# to the type checker (a scale as int is a different bug class)
+_NARROW_NAMES = {"jnp.bfloat16", "jnp.float16", "jax.numpy.bfloat16",
+                 "jax.numpy.float16", "np.float16", "numpy.float16"}
+
+
+def _is_f32(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    if dotted(node) in _F32_NAMES:
+        return True
+    return isinstance(node, ast.Constant) and node.value == "float32"
+
+
+def _is_narrow_float(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    if dotted(node) in _NARROW_NAMES:
+        return True
+    return isinstance(node, ast.Constant) and node.value in (
+        "bfloat16", "float16")
+
+
+def _mentions_scale(node: ast.AST) -> bool:
+    """Any Name / attribute component containing 'scale' in the subtree."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and "scale" in sub.id.lower():
+            return True
+        if isinstance(sub, ast.Attribute) and "scale" in sub.attr.lower():
+            return True
+    return False
+
+
+def _has_f32_astype(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call)
+                and isinstance(sub.func, ast.Attribute)
+                and sub.func.attr == "astype"
+                and sub.args and _is_f32(sub.args[0])):
+            return True
+    return False
+
+
+def _dtype_arg(call: ast.Call, fn_last: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    pos = _DTYPE_POS.get(fn_last)
+    if pos is not None and len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def check(src: SourceFile) -> List[Finding]:
+    parts = src.path.replace("\\", "/").split("/")
+    if not any(d in parts for d in APPLY_DIRS):
+        return []
+    findings: List[Finding] = []
+
+    def emit(node: ast.AST, msg: str) -> None:
+        findings.append(Finding(RULE, src.path, node.lineno, msg,
+                                node.col_offset))
+
+    for node in ast.walk(src.tree):
+        # (A) scale-named allocation with a narrow float dtype
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            targets = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if any("scale" in t.lower() for t in targets):
+                fname = dotted(node.value.func) or ""
+                head, _, last = fname.rpartition(".")
+                if last in _ALLOC_FNS and head in ("jnp", "jax.numpy",
+                                                   "np", "numpy"):
+                    dt = _dtype_arg(node.value, last)
+                    if _is_narrow_float(dt):
+                        emit(node.value,
+                             f"scale '{targets[0]}' allocated as a narrow "
+                             "float; per-row quant scales must stay "
+                             "float32 (one scale stands in for a whole "
+                             "row's mantissas)")
+        if isinstance(node, ast.Call):
+            # (A) scale-named value cast to a narrow float
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args
+                    and _is_narrow_float(node.args[0])
+                    and _mentions_scale(node.func.value)):
+                emit(node, "quant scale cast to a narrow float; scales "
+                           "must stay float32 end-to-end")
+            # (B) materialised f32 dequant of pool/weight rows
+            if (dotted(node.func) or "").rpartition(".")[2] \
+                    == "dequantize_rows":
+                dt = node.args[2] if len(node.args) > 2 else None
+                for kw in node.keywords:
+                    if kw.arg == "dtype":
+                        dt = kw.value
+                if _is_f32(dt):
+                    emit(node, "dequantize_rows to float32 materialises a "
+                               "full-width dequantized copy (4x the "
+                               "quantized bytes); dequant to the cache "
+                               "dtype, or fold the scale into the f32 "
+                               "accumulator instead")
+        # (C) manual f32 dequant multiply outside the accumulator
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+            l, r = node.left, node.right
+            if ((_has_f32_astype(l) and _mentions_scale(r))
+                    or (_has_f32_astype(r) and _mentions_scale(l))):
+                emit(node, "f32 .astype multiplied by a scale: a manual "
+                           "f32 dequant on cache-shaped data; the fused "
+                           "decode paths apply scales inside the softmax "
+                           "accumulator instead of widening the rows")
+    return findings
